@@ -1,0 +1,37 @@
+"""Paper Figure 5: accuracy-vs-round curves under different Gaussian means
+(fixed relative variance).  Claim validated: FedaGrac reaches the target in
+fewer rounds; the convex track exposes objective inconsistency —
+FedAvg/FedNova/FedProx plateau below FedaGrac/SCAFFOLD.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_sim
+
+T = 40
+ALGOS = ("fedagrac", "fedavg", "fednova", "scaffold", "fedprox")
+LAM = {"fedagrac": 0.5}
+
+
+def run(quick: bool = False) -> list[tuple]:
+    t = 15 if quick else T
+    rows = []
+    means = (40,) if quick else (10, 40)
+    for kind in ("lr", "mlp"):
+        for mean in means:
+            for algo in ALGOS:
+                task = make_task(kind, noniid=True)
+                lam = 1.0 if kind == "lr" else LAM.get(algo, 1.0)
+                hist = run_sim(task, algo, t, k_mean=mean,
+                               k_var=float(mean ** 2) / 4, lam=lam)
+                pts = hist.metric[:: max(t // 5, 1)] + [hist.metric[-1]]
+                rows.append(("fig5", kind, mean, algo,
+                             ";".join(f"{p:.3f}" for p in pts)))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick), ("bench", "model", "k_mean", "algorithm", "acc_curve"))
+
+
+if __name__ == "__main__":
+    main()

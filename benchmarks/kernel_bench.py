@@ -1,0 +1,76 @@
+"""Kernel-level benchmarks.
+
+On this CPU container Pallas runs in interpret mode (not representative),
+so we benchmark the XLA-fused jnp oracle vs an intentionally UNFUSED
+3-pass variant to quantify the fusion win the Pallas kernel locks in on
+TPU, and report the analytic HBM-traffic model (bytes moved per element).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.calibrated_update import ref as cu_ref
+from repro.kernels.flash_attention import ref as fa_ref
+
+N = 4_000_000
+
+
+def _timeit(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+@jax.jit
+def _fused(x, g, c):
+    return cu_ref.calibrated_update(x, g, c, 0.01, 0.5)
+
+
+@jax.jit
+def _unfused(x, g, c):
+    # forced materialization of each stage via optimization barriers
+    s1 = jax.lax.optimization_barrier(0.5 * c)
+    s2 = jax.lax.optimization_barrier(g + s1)
+    return x - 0.01 * s2
+
+
+def run(quick: bool = False) -> list[tuple]:
+    n = N // 8 if quick else N
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    x, g, c = (jax.random.normal(k, (n,), jnp.float32) for k in ks)
+    t_fused = _timeit(_fused, x, g, c)
+    t_unfused = _timeit(_unfused, x, g, c)
+    rows = [
+        ("kernel", "calibrated_update_fused_us", round(t_fused * 1e6, 1)),
+        ("kernel", "calibrated_update_unfused_us",
+         round(t_unfused * 1e6, 1)),
+        ("kernel", "fusion_speedup", round(t_unfused / t_fused, 3)),
+        # analytic HBM model (bytes/element): fused 3R+1W vs unfused 7R+3W
+        ("kernel", "bytes_per_elem_fused", 16),
+        ("kernel", "bytes_per_elem_unfused", 40),
+    ]
+    B, S, H, D = (1, 256, 4, 64) if quick else (2, 512, 8, 64)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    att = jax.jit(lambda a, b, c2: fa_ref.attention(a, b, c2))
+    t_att = _timeit(att, q, k, v, reps=5)
+    rows.append(("kernel", "ref_attention_us", round(t_att * 1e6, 1)))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick), ("bench", "metric", "value"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""§Roofline table: read the dry-run sweep JSONL and print the three-term
+roofline per (arch × shape × mesh) with the dominant bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+FILES = ("dryrun_single_pod.jsonl", "dryrun_multi_pod.jsonl",
+         "dryrun_2d_variant.jsonl", "dryrun_single_pod_baseline.jsonl")
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r   # keep latest per combo
+    return list(recs.values())
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = []
+    for fname in FILES:
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        tag = ("baseline" if "baseline" in fname else
+               "2d" if "2d" in fname else "optimized")
+        for r in load(path):
+            if r["status"] == "skipped":
+                rows.append(("roofline", tag, r["mesh"], r["arch"],
+                             r["shape"], "skipped", "-", "-", "-", "-", "-"))
+                continue
+            if r["status"] != "ok":
+                rows.append(("roofline", tag, r["mesh"], r["arch"],
+                             r["shape"], "FAILED", "-", "-", "-", "-", "-"))
+                continue
+            rl = r["roofline"]
+            rows.append((
+                "roofline", tag, r["mesh"], r["arch"], r["shape"], "ok",
+                f"{rl['t_compute_s']:.3e}", f"{rl['t_memory_s']:.3e}",
+                f"{rl['t_collective_s']:.3e}", rl["dominant"],
+                "-" if rl["useful_ratio"] is None
+                else f"{rl['useful_ratio']:.3f}"))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    hdr = ("bench", "source", "mesh", "arch", "shape", "status",
+           "t_compute_s", "t_memory_s", "t_collective_s", "dominant",
+           "useful_ratio")
+    print(",".join(hdr))
+    for row in rows:
+        print(",".join(str(x) for x in row))
+    if not rows:
+        print("# no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --out "
+              "results/dryrun_single_pod.jsonl` first")
+
+
+if __name__ == "__main__":
+    main()

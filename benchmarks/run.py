@@ -1,0 +1,62 @@
+"""Benchmark aggregator: one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Each module prints CSV rows; headers carry the claim being validated in
+the module docstring.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (ablation_int8_nu, fairness, fig2_lambda,
+                        fig3_orientation, fig4_grid, fig5_curves,
+                        kernel_bench, roofline_table, server_opt,
+                        table1_deterioration, table2_utilization,
+                        table6_rounds, thm1_quadratic)
+
+MODULES = {
+    "thm1": thm1_quadratic,
+    "table1": table1_deterioration,
+    "table2": table2_utilization,
+    "fig2": fig2_lambda,
+    "fig3": fig3_orientation,
+    "fig4": fig4_grid,
+    "table6": table6_rounds,
+    "fig5": fig5_curves,
+    "kernel": kernel_bench,
+    "int8_nu": ablation_int8_nu,
+    "fairness": fairness,
+    "server_opt": server_opt,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/grids (CI budget)")
+    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(MODULES)
+    failures = []
+    for name in names:
+        mod = MODULES[name]
+        print(f"\n# ===== {name}: {mod.__doc__.strip().splitlines()[0]}")
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Continuous-batching serving: ragged requests through one cache pool.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+
+Eight requests with different prompt/generation lengths stream through a
+3-slot engine: prompts prefill into free slots (bucketed), every tick
+decodes one token for all live slots in a single batched call, finished
+requests free their slot immediately.  Output tokens are bit-identical to
+per-request greedy decoding (tests/test_serving_engine.py).
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_arch
+from repro.models import model as M
+from repro.serving import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = reduced(get_arch("llama3-8b"), n_layers=2, d_model=128)
+    cfg = dataclasses.replace(cfg, vocab=1024)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab, size=int(n)).astype(
+                        np.int32),
+                    max_new_tokens=int(m))
+            for i, (n, m) in enumerate(
+                [(5, 12), (30, 4), (12, 20), (8, 6),
+                 (28, 10), (3, 16), (17, 8), (22, 5)])]
+
+    eng = ServeEngine(cfg, params, slots=3, max_len=128,
+                      prefill_buckets=(8, 16, 32))
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total = sum(len(c.tokens) for c in done)
+    print(f"{'uid':>4} {'prompt':>7} {'new':>4} {'ticks':>6}   first tokens")
+    for c in sorted(done, key=lambda c: c.uid):
+        print(f"{c.uid:>4} {c.prompt_len:>7} {len(c.tokens):>4} "
+              f"{c.ticks:>6}   {c.tokens[:6]}")
+    print(f"\n{len(done)} requests, {total} tokens, {eng.ticks} engine ticks "
+          f"({total / max(eng.ticks, 1):.2f} tokens/tick vs 1.0 sequential) "
+          f"in {dt:.1f}s")
+    assert len(done) == len(reqs)
+    assert total / max(eng.ticks, 1) > 1.2, "batching should beat sequential"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: federated training of a ~100M-param LM with FedaGrac.
+
+    PYTHONPATH=src python examples/fed_lm_train.py [--rounds 50] [--small]
+
+4 clients hold topic-skewed Zipf token streams (non-IID at the unigram
+level) and run K_i ~ N(4, 2²) local steps per round.  Default model: an
+8-layer d=512 llama-family transformer (~100M params with the 32k vocab);
+--small shrinks it to a 2-layer d=128 model for CI (≈30 s for 12 rounds).
+Checkpoints every 10 rounds via repro.checkpoint.
+"""
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.configs.base import FedConfig, reduced
+from repro.configs.registry import get_arch
+from repro.data import LMFederatedBatcher, lm_sequences
+from repro.fed import FederatedSimulation
+from repro.models import model as M
+
+MCLIENTS = 4
+
+
+def build_config(small: bool):
+    base = get_arch("llama3-8b")
+    if small:
+        cfg = reduced(base, n_layers=2, d_model=128)
+        return dataclasses.replace(cfg, vocab=512)
+    cfg = reduced(base, n_layers=8, d_model=512, vocab=32_000)
+    return dataclasses.replace(cfg, n_heads=8, n_kv_heads=4, head_dim=64,
+                               d_ff=2048, vocab=32_000)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--small", action="store_true",
+                    help="2-layer reduced model (CI budget)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--algo", default="fedagrac")
+    ap.add_argument("--ckpt", default="/tmp/fed_lm_{round}.msgpack")
+    args = ap.parse_args()
+
+    cfg = build_config(args.small)
+    print(f"model: llama-family {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab}  params ≈ {cfg.param_count() / 1e6:.1f}M")
+
+    key = jax.random.PRNGKey(0)
+    streams = [lm_sequences(jax.random.fold_in(key, i), 128, args.seq,
+                            cfg.vocab, skew_topic=i) for i in range(MCLIENTS)]
+    batcher = LMFederatedBatcher(streams, batch_size=args.batch)
+    fed = FedConfig(algorithm=args.algo, n_clients=MCLIENTS, k_mean=4,
+                    k_var=4.0, lr=0.3, calibration_rate=0.5)
+
+    params = M.init_params(key, cfg)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    held_out = lm_sequences(jax.random.fold_in(key, 999), 8, args.seq,
+                            cfg.vocab, skew_topic=1)
+    eval_jit = jax.jit(loss_fn)
+
+    def eval_ppl(p):
+        return float(jnp.exp(eval_jit(p, held_out)))
+
+    sim = FederatedSimulation(lambda p, b: loss_fn(p, b), params, fed,
+                              batcher, eval_fn=eval_ppl,
+                              t_max=max(args.rounds, 1))
+    ckpt_cb = checkpoint.save_every(args.ckpt, every=10)
+    t0 = time.time()
+    for t in range(args.rounds):
+        hist = sim.run(1)
+        ckpt_cb(t + 1, sim.params)
+        if t % 5 == 0 or t == args.rounds - 1:
+            print(f"round {t + 1:3d}  train loss {hist.loss[-1]:.4f}  "
+                  f"held-out ppl {hist.metric[-1]:.1f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    final = eval_ppl(sim.params)
+    print(f"\nfinal held-out perplexity: {final:.1f} "
+          f"(uniform baseline {cfg.vocab})")
+    assert final < 0.8 * cfg.vocab, "model failed to learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Theorem 1 in pictures (ASCII): the FedAvg round map walks to a fixed
+point that is NOT the optimum; FedaGrac walks to the optimum.
+
+    PYTHONPATH=src python examples/objective_inconsistency.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import rounds, theory
+from repro.core.fedopt import get_algorithm
+from repro.data.synthetic import quadratic_clients
+from repro.models.simple import quad_loss
+
+M, D, LR = 8, 12, 0.02
+K = np.array([1, 1, 2, 2, 4, 4, 8, 20], np.int32)
+W = np.full(M, 1.0 / M, np.float32)
+
+
+def trajectory(algo_name, lam, As, bs, t=200):
+    fed = FedConfig(algorithm=algo_name, n_clients=M, lr=LR,
+                    calibration_rate=lam)
+    algo = get_algorithm(algo_name, fed)
+    k_max = int(K.max())
+    state = rounds.init_state({"x": jnp.zeros((D,))}, M, algo)
+    fn = jax.jit(rounds.make_round(quad_loss, algo, lr=LR, k_max=k_max))
+    batches = {
+        "A": jnp.broadcast_to(jnp.asarray(As)[:, None], (M, k_max, D, D)),
+        "b": jnp.broadcast_to(jnp.asarray(bs)[:, None], (M, k_max, D)),
+        "c0": jnp.zeros((M, k_max)),
+    }
+    xs = []
+    for _ in range(t):
+        state, _ = fn(state, batches, jnp.asarray(K), jnp.asarray(W))
+        xs.append(np.asarray(state["params"]["x"]))
+    return xs
+
+
+def main() -> None:
+    As, bs = quadratic_clients(jax.random.PRNGKey(0), M, D, hetero=1.5)
+    x_star = theory.global_optimum(As, bs, W)
+    fp = theory.fedavg_fixed_point(As, bs, W, K, LR)
+    print(f"Theorem-1 RHS (inconsistency bound): "
+          f"{theory.objective_inconsistency_rhs(As, bs, W, K, x_star):.3f}")
+    print(f"closed-form FedAvg fixed point is "
+          f"{np.linalg.norm(fp - x_star):.3f} away from x*\n")
+    print(f"{'round':>6} {'FedAvg → x*':>14} {'FedaGrac → x*':>14}")
+    tr_avg = trajectory("fedavg", 0.0, As, bs)
+    tr_grac = trajectory("fedagrac", 1.0, As, bs)
+    for t in (0, 4, 9, 24, 49, 99, 199):
+        da = np.linalg.norm(tr_avg[t] - x_star)
+        dg = np.linalg.norm(tr_grac[t] - x_star)
+        bar_a = "#" * int(20 * da / max(np.linalg.norm(tr_avg[0] - x_star),
+                                       1e-9))
+        print(f"{t + 1:>6} {da:>14.6f} {dg:>14.6f}   {bar_a}")
+    print(f"\nFedAvg stalled at its fixed point "
+          f"(dist {np.linalg.norm(tr_avg[-1] - fp):.2e} from closed form); "
+          f"FedaGrac reached x*.")
+
+
+if __name__ == "__main__":
+    main()

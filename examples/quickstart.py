@@ -1,0 +1,46 @@
+"""Quickstart: FedaGrac vs FedAvg/FedNova under step asynchronism.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+10 clients on the FedProx synthetic(1,1) non-IID task; 9 clients run K=2
+local steps per round, one (the "GPU client") runs K=200 — the paper's
+bimodal step-asynchronism regime.  FedaGrac converts the fast client's
+extra work into convergence speed; FedAvg and FedNova cannot.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+import jax
+from repro.configs.base import FedConfig
+from repro.data import FederatedBatcher, fedprox_synthetic
+from repro.fed import FederatedSimulation
+from repro.models.simple import lr_accuracy, lr_loss
+
+M, T = 10, 40
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    eval_fn = lambda p: float(lr_accuracy(p, {"x": data.x, "y": data.y}))
+    ks = np.full((1, M), 2, np.int32)
+    ks[0, -1] = 200                       # one fast client
+
+    print(f"{'algorithm':12s} {'rounds→77%':>11s} {'final acc':>10s}")
+    for algo in ("fedavg", "fednova", "fedagrac"):
+        batcher = FederatedBatcher(data, parts, batch_size=20)
+        fed = FedConfig(algorithm=algo, n_clients=M, lr=0.02,
+                        calibration_rate=1.0, weights="data")
+        params = {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+        sim = FederatedSimulation(lr_loss, params, fed, batcher,
+                                  eval_fn=eval_fn, k_schedule=ks)
+        hist = sim.run(T)
+        r = hist.rounds_to_target(0.77)
+        print(f"{algo:12s} {str(r) if r else f'>{T}':>11s} "
+              f"{hist.metric[-1]:>10.4f}")
+    print("\nFedaGrac exploits the fast client's 100× local work; "
+          "FedAvg drifts and FedNova normalizes it away (paper Table 2).")
+
+
+if __name__ == "__main__":
+    main()

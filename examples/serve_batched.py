@@ -1,0 +1,64 @@
+"""Batched serving: prefill a prompt batch, then decode with the KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch llama3-8b]
+
+Uses the REDUCED variant of the chosen architecture (CPU budget), the same
+serve_prefill / serve_decode entry points the pod-scale dry-run lowers.
+Demonstrates: ragged prompt batch → prefill → greedy decode loop →
+per-request detokenized ids.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch} needs a modality frontend — use a "
+                         f"text arch for this example")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, S0, T = args.batch, args.prompt_len, args.new_tokens
+
+    prompts = jax.random.randint(key, (B, S0), 0, cfg.vocab)
+    caches = M.init_caches(cfg, B, max_len=S0 + T, dtype=jnp.float32)
+
+    prefill = jax.jit(lambda p, b, c: M.serve_prefill(p, b, cfg, caches=c))
+    decode = jax.jit(lambda p, b, c, off: M.serve_decode(p, b, c, off, cfg))
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": prompts}, caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    out = [tok]
+    for s in range(T - 1):
+        logits, caches = decode(params, {"tokens": tok[:, None]}, caches,
+                                S0 + s)
+        tok = jnp.argmax(logits[:, 0], axis=-1)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    for i in range(B):
+        print(f"req {i}: prompt={np.asarray(prompts[i])[:8]}... "
+              f"generated={gen[i][:12]}...")
+    print(f"\n{B} requests × {T} tokens in {dt:.2f}s "
+          f"({B * T / dt:.1f} tok/s on CPU, reduced {args.arch})")
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab)
+
+
+if __name__ == "__main__":
+    main()

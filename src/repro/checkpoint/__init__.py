@@ -1,0 +1,3 @@
+from repro.checkpoint.serialize import load, save, save_every
+
+__all__ = ["load", "save", "save_every"]

@@ -1,0 +1,6 @@
+from repro.configs.base import (FedConfig, MLAConfig, MoEConfig, ModelConfig,
+                                ShapeConfig, SSMConfig, XLSTMConfig, reduced)
+from repro.configs.shapes import LONG_CONTEXT_OK, SHAPES
+
+__all__ = ["FedConfig", "MLAConfig", "MoEConfig", "ModelConfig", "ShapeConfig",
+           "SSMConfig", "XLSTMConfig", "reduced", "SHAPES", "LONG_CONTEXT_OK"]

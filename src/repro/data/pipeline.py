@@ -1,0 +1,77 @@
+"""Federated round batching: assemble the (M, k_max, batch…) microbatch
+tensors that the round engine (core/rounds.py) scans over.
+
+Each client re-samples with replacement from its own partition — clients own
+disjoint index sets, so the per-round tensor is fully determined by (round,
+seed) and regenerable on any host (important for the SPMD path, where each
+data slice materializes only its own clients' rows)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+class FederatedBatcher:
+    """Per-round microbatch sampler over client partitions."""
+
+    def __init__(self, data: Dataset, parts: list[np.ndarray],
+                 batch_size: int, seed: int = 0):
+        self.data = data
+        self.parts = parts
+        self.m = len(parts)
+        self.batch_size = batch_size
+        self.seed = seed
+        n_total = sum(len(p) for p in parts)
+        self.weights = jnp.array([len(p) / n_total for p in parts],
+                                 jnp.float32)
+
+    def round_batches(self, t: int, k_max: int) -> dict:
+        """(M, k_max, B, …) feature/label tensors for round ``t``."""
+        rng = np.random.default_rng((self.seed, t))
+        idx = np.stack([
+            part[rng.integers(0, len(part), (k_max, self.batch_size))]
+            for part in self.parts])                       # (M, k_max, B)
+        return {"x": jnp.asarray(np.asarray(self.data.x)[idx]),
+                "y": jnp.asarray(np.asarray(self.data.y)[idx])}
+
+
+class LMFederatedBatcher:
+    """Token-stream version: each client owns a topic-skewed stream."""
+
+    def __init__(self, streams: list[dict], batch_size: int, seed: int = 0):
+        self.streams = streams                              # per-client dicts
+        self.m = len(streams)
+        self.batch_size = batch_size
+        self.seed = seed
+        n_total = sum(s["tokens"].shape[0] for s in streams)
+        self.weights = jnp.array(
+            [s["tokens"].shape[0] / n_total for s in streams], jnp.float32)
+
+    def round_batches(self, t: int, k_max: int) -> dict:
+        rng = np.random.default_rng((self.seed, t))
+        toks, labs = [], []
+        for s in self.streams:
+            n = s["tokens"].shape[0]
+            idx = rng.integers(0, n, (k_max, self.batch_size))
+            toks.append(np.asarray(s["tokens"])[idx])
+            labs.append(np.asarray(s["labels"])[idx])
+        return {"tokens": jnp.asarray(np.stack(toks)),
+                "labels": jnp.asarray(np.stack(labs))}
+
+
+def eval_metric(metric_fn: Callable, params, data: Dataset,
+                batch: int = 1024) -> float:
+    """Mean of ``metric_fn(params, {"x","y"})`` over the dataset."""
+    n = len(data)
+    total, count = 0.0, 0
+    for s in range(0, n, batch):
+        b = {"x": data.x[s:s + batch], "y": data.y[s:s + batch]}
+        k = b["y"].shape[0]
+        total += float(metric_fn(params, b)) * k
+        count += k
+    return total / max(count, 1)

@@ -1,0 +1,136 @@
+"""Synthetic datasets preserving the paper's experimental structure.
+
+No network access in this container, so Fashion-MNIST / CIFAR-10 / a9a are
+replaced by synthetic tasks with the same convex/non-convex split:
+
+* ``gaussian_classification`` — linearly-separable-ish Gaussian class blobs
+  (stands in for a9a / Fashion-MNIST under LR and MLP objectives);
+* ``image_classification`` — class-templated 28×28×1 "images" with noise
+  (stands in for Fashion-MNIST under the 2-layer CNN);
+* ``quadratic_clients`` — per-client strongly-convex quadratics with closed
+  -form local/global optima (Theorem 1/3 validation);
+* ``token_stream`` — Zipf-sampled LM token streams with per-client unigram
+  skew (the non-IID LM task used by the framework-scale FedaGrac runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """In-memory supervised dataset (features x, int labels y)."""
+    x: jnp.ndarray
+    y: jnp.ndarray
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
+
+
+def gaussian_classification(key, n: int, d: int = 32, n_classes: int = 10,
+                            sep: float = 2.0, noise: float = 1.0) -> Dataset:
+    """Gaussian blobs: class c centred at sep·μ_c, unit covariance."""
+    k_mu, k_y, k_x = jax.random.split(key, 3)
+    mus = jax.random.normal(k_mu, (n_classes, d)) * sep
+    y = jax.random.randint(k_y, (n,), 0, n_classes)
+    x = mus[y] + jax.random.normal(k_x, (n, d)) * noise
+    return Dataset(x=x, y=y)
+
+
+def image_classification(key, n: int, n_classes: int = 10, side: int = 28,
+                         noise: float = 0.35) -> Dataset:
+    """Class-templated grey-scale images (B, side, side, 1)."""
+    k_t, k_y, k_x = jax.random.split(key, 3)
+    templates = jax.random.normal(k_t, (n_classes, side, side, 1))
+    templates = jax.nn.sigmoid(2.0 * templates)                 # [0,1]-ish
+    y = jax.random.randint(k_y, (n,), 0, n_classes)
+    x = templates[y] + jax.random.normal(k_x, (n, side, side, 1)) * noise
+    return Dataset(x=x, y=y)
+
+
+def quadratic_clients(key, m: int, d: int = 16, hetero: float = 1.0,
+                      cond: float = 4.0):
+    """Per-client F_i(x) = ½‖A_i x − b_i‖².
+
+    ``hetero`` scales the spread of the per-client optima x*_i (0 ⇒ IID:
+    identical b_i); ``cond`` the condition-number spread of A_i.  Returns
+    (As (m,d,d), bs (m,d)) as numpy for the closed-form theory module.
+    """
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    As, bs = [], []
+    b_common = rng.normal(size=d)
+    for _ in range(m):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        eig = np.exp(rng.uniform(0.0, np.log(cond), size=d))
+        A = q * np.sqrt(eig)                                  # A s.t. AᵀA = QΛQᵀ
+        b = b_common + hetero * rng.normal(size=d)
+        As.append(A.astype(np.float32))
+        bs.append(b.astype(np.float32))
+    return np.stack(As), np.stack(bs)
+
+
+def token_stream(key, n_tokens: int, vocab: int, skew_topic=None,
+                 zipf_a: float = 1.2) -> jnp.ndarray:
+    """Zipf token stream; ``skew_topic`` (int) biases a vocab band so clients
+    with different topics are non-IID at the unigram level."""
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    probs = ranks ** (-zipf_a)
+    if skew_topic is not None:
+        band = vocab // 8
+        start = (skew_topic * band) % max(vocab - band, 1)
+        boost = jnp.zeros((vocab,)).at[start:start + band].set(1.0)
+        probs = probs * (1.0 + 7.0 * boost)
+    probs = probs / jnp.sum(probs)
+    return jax.random.choice(key, vocab, (n_tokens,), p=probs)
+
+
+def lm_sequences(key, n_seq: int, seq_len: int, vocab: int,
+                 skew_topic=None) -> dict:
+    """(tokens, labels) next-token pairs of shape (n_seq, seq_len)."""
+    stream = token_stream(key, n_seq * (seq_len + 1), vocab, skew_topic)
+    chunks = stream.reshape(n_seq, seq_len + 1)
+    return {"tokens": chunks[:, :-1], "labels": chunks[:, 1:]}
+
+
+def fedprox_synthetic(key, m: int, alpha: float = 1.0, beta: float = 1.0,
+                      d: int = 60, n_classes: int = 10,
+                      n_per_client: int = 400, iid: bool = False):
+    """Synthetic(α, β) from Li et al. (FedProx) — the canonical non-IID FL
+    task.  Client i draws a local softmax model W_i ~ N(u_i, 1),
+    u_i ~ N(0, α), and features x ~ N(v_i, Λ), v_i ~ N(B_i, 1),
+    B_i ~ N(0, β), Λ_jj = j^{-1.2}.  α controls model conflict (no single
+    global model fits all clients), β feature skew.
+
+    Returns (Dataset over the union, list of per-client index arrays).
+    """
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    lam = np.diag(np.arange(1, d + 1, dtype=np.float64) ** -1.2)
+    xs, ys, parts = [], [], []
+    offset = 0
+    W_shared = rng.normal(0, 1.0, size=(d, n_classes))
+    b_shared = rng.normal(0, 1.0, size=(n_classes,))
+    for i in range(m):
+        if iid:
+            W, b, v = W_shared, b_shared, np.zeros(d)
+        else:
+            u = rng.normal(0, np.sqrt(alpha))
+            W = rng.normal(u, 1.0, size=(d, n_classes))
+            b = rng.normal(u, 1.0, size=(n_classes,))
+            Bi = rng.normal(0, np.sqrt(beta))
+            v = rng.normal(Bi, 1.0, size=(d,))
+        x = rng.multivariate_normal(v, lam, size=n_per_client)
+        logits = x @ W + b
+        p = np.exp(logits - logits.max(axis=1, keepdims=True))
+        p /= p.sum(axis=1, keepdims=True)
+        y = np.array([rng.choice(n_classes, p=pi) for pi in p])
+        xs.append(x.astype(np.float32))
+        ys.append(y.astype(np.int32))
+        parts.append(np.arange(offset, offset + n_per_client))
+        offset += n_per_client
+    data = Dataset(x=jnp.asarray(np.concatenate(xs)),
+                   y=jnp.asarray(np.concatenate(ys)))
+    return data, parts

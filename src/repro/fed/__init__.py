@@ -1,0 +1,4 @@
+from repro.fed.simulation import (FederatedSimulation, History,
+                                  compare_algorithms)
+
+__all__ = ["FederatedSimulation", "History", "compare_algorithms"]

@@ -1,0 +1,130 @@
+"""Single-host federated simulator.
+
+Drives the SPMD round engine (core/rounds.py) with vmap-over-clients on one
+device: samples K_i schedules, assembles per-round microbatches, runs T
+rounds jitted, and records loss / eval metrics.  This is the harness behind
+the paper-experiment benchmarks (Tables 1/2/6, Figures 2/3/5)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import rounds
+from repro.core.fedopt import get_algorithm
+from repro.data.partition import gaussian_k_schedule
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class History:
+    loss: list[float] = dataclasses.field(default_factory=list)
+    metric: list[float] = dataclasses.field(default_factory=list)
+    kbar: list[float] = dataclasses.field(default_factory=list)
+    wall: list[float] = dataclasses.field(default_factory=list)
+    per_client: list[list[float]] = dataclasses.field(default_factory=list)
+
+    def fairness(self) -> Optional[dict]:
+        """FL fairness of the final round: worst-client metric and the
+        across-client std (Li et al. q-FFL reporting convention)."""
+        if not self.per_client:
+            return None
+        last = self.per_client[-1]
+        return {"worst": min(last), "best": max(last),
+                "std": float(np.std(last))}
+
+    def rounds_to_target(self, target: float, higher_is_better=True
+                         ) -> Optional[int]:
+        for t, v in enumerate(self.metric):
+            if (v >= target) if higher_is_better else (v <= target):
+                return t + 1
+        return None
+
+
+class FederatedSimulation:
+    """``run(T)`` executes T rounds of ``fed.algorithm`` on one device."""
+
+    def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                 params: PyTree, fed: FedConfig, batcher,
+                 eval_fn: Optional[Callable[[PyTree], float]] = None,
+                 eval_per_client: Optional[Callable[[PyTree],
+                                                    list]] = None,
+                 k_schedule: Optional[np.ndarray] = None,
+                 lam_schedule: Optional[Callable[[int], float]] = None,
+                 t_max: int = 10_000):
+        self.fed = fed
+        self.algo = get_algorithm(fed.algorithm, fed)
+        self.batcher = batcher
+        self.eval_fn = eval_fn
+        self.eval_per_client = eval_per_client
+        self.lam_schedule = lam_schedule
+        if k_schedule is None:
+            k_schedule = gaussian_k_schedule(
+                fed.n_clients, fed.k_mean, fed.k_var, t_max,
+                mode=fed.k_mode, seed=fed.seed)
+        self.k_schedule = k_schedule
+        self.k_max = int(k_schedule.max())
+        self.weights = (jnp.asarray(batcher.weights)
+                        if fed.weights == "data"
+                        else jnp.full((fed.n_clients,),
+                                      1.0 / fed.n_clients, jnp.float32))
+        self.state = rounds.init_state(params, fed.n_clients, self.algo)
+        self._round_cache: dict[float, Callable] = {}
+        self._loss_fn = loss_fn
+
+    def _round_fn(self, lam: float) -> Callable:
+        if lam not in self._round_cache:
+            algo = dataclasses.replace(self.algo, lam=lam)
+            fn = rounds.make_round(self._loss_fn, algo, lr=self.fed.lr,
+                                   k_max=self.k_max)
+            self._round_cache[lam] = jax.jit(fn)
+        return self._round_cache[lam]
+
+    def run(self, t_rounds: int, eval_every: int = 1,
+            verbose: bool = False) -> History:
+        hist = History()
+        for t in range(t_rounds):
+            lam = (float(self.lam_schedule(t)) if self.lam_schedule
+                   else self.algo.lam)
+            round_fn = self._round_fn(lam)
+            k_t = jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
+            batches = self.batcher.round_batches(t, self.k_max)
+            t0 = time.perf_counter()
+            self.state, metrics = round_fn(self.state, batches, k_t,
+                                           self.weights)
+            loss = float(metrics["loss"])
+            hist.loss.append(loss)
+            hist.kbar.append(float(metrics["kbar"]))
+            hist.wall.append(time.perf_counter() - t0)
+            if self.eval_fn is not None and (t + 1) % eval_every == 0:
+                hist.metric.append(float(self.eval_fn(self.state["params"])))
+            if self.eval_per_client is not None and \
+                    (t + 1) % eval_every == 0:
+                hist.per_client.append(
+                    [float(v) for v in
+                     self.eval_per_client(self.state["params"])])
+            if verbose and (t % 10 == 0 or t == t_rounds - 1):
+                m = hist.metric[-1] if hist.metric else float("nan")
+                print(f"  round {t:4d}  loss={loss:.4f}  metric={m:.4f}")
+        return hist
+
+    @property
+    def params(self) -> PyTree:
+        return self.state["params"]
+
+
+def compare_algorithms(algorithms: list[str], make_sim: Callable[[str],
+                       FederatedSimulation], t_rounds: int,
+                       eval_every: int = 1) -> dict[str, History]:
+    """Run the same task under several algorithms (benchmark helper)."""
+    out = {}
+    for name in algorithms:
+        sim = make_sim(name)
+        out[name] = sim.run(t_rounds, eval_every=eval_every)
+    return out

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; TPU is the target):
+
+* ``calibrated_update`` — fused FedaGrac local step x ← x − η(g + λc)
+* ``flash_attention``   — blocked online-softmax attention, forward +
+                          custom_vjp backward kernels (training path)
+* ``ssd_scan``          — chunked Mamba2 SSD scan, state carried in VMEM
+                          across the sequential chunk grid axis
+"""
+from repro.kernels.calibrated_update.ops import calibrated_update_tree
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_diff)
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+__all__ = ["calibrated_update_tree", "flash_attention",
+           "flash_attention_diff", "ssd_scan"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused calibrated local update (Alg. 1, line 9):
+
+    x ← x − η (g + λ c)        c = ν − ν⁽ⁱ⁾
+
+and its FedProx variant  x ← x − η (g + λ c + μ (x − x₀)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def calibrated_update(x: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,
+                      eta: float, lam: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    return (xf - eta * (gf + lam * cf)).astype(x.dtype)
+
+
+def calibrated_update_prox(x: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,
+                           x0: jnp.ndarray, eta: float, lam: float,
+                           mu: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    x0f = x0.astype(jnp.float32)
+    return (xf - eta * (gf + lam * cf + mu * (xf - x0f))).astype(x.dtype)

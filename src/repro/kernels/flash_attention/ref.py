@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) flash attention
+with GQA head groups.  Materializes the full score matrix — O(S²) memory,
+fine for test shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              scale: float | None = None) -> jax.Array:
+    """q (B, Sq, H, D); k, v (B, Skv, Hkv, D); H multiple of Hkv."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qr = q.reshape(B, Sq, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr * scale, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = kv_pos <= q_pos
+    if window:
+        mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

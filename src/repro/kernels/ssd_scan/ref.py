@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the chunked SSD (Mamba2) scan — re-exports the model
+layer's implementation, which tests/test_ssm_equivalence.py proves exactly
+equal to the naive per-step recurrence."""
+from repro.models.mamba2 import ssd_chunked  # noqa: F401

@@ -1,0 +1,83 @@
+"""Multi-host bootstrap for real pods.
+
+On hardware, every host runs the same program; `bootstrap()` wires
+jax.distributed from standard cluster env vars (GKE/GCE TPU metadata or
+explicit COORDINATOR_ADDRESS), then the launcher builds the production
+mesh over jax.devices() exactly as the dry-run does over the 512
+host-platform placeholders.
+
+Host-local data feeding: each host materializes only the examples whose
+client slices live on its addressable devices —
+``host_client_slice(mesh)`` exposes that range; the batchers in
+repro.data are deterministic in (seed, round), so no data service or
+cross-host shuffle is needed (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def bootstrap(coordinator: Optional[str] = None,
+              num_processes: Optional[int] = None,
+              process_id: Optional[int] = None) -> None:
+    """Initialize jax.distributed.  No-ops on single-process runs.
+
+    Env fallbacks: COORDINATOR_ADDRESS, NUM_PROCESSES, PROCESS_ID (set by
+    scripts/launch_pod.sh); on Cloud TPU the args auto-detect."""
+    coordinator = coordinator or os.environ.get("COORDINATOR_ADDRESS")
+    num_processes = num_processes or _int_env("NUM_PROCESSES")
+    process_id = process_id if process_id is not None else _int_env(
+        "PROCESS_ID")
+    if num_processes in (None, 1) and coordinator is None:
+        return                                      # single-process / CPU dev
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id)
+
+
+def _int_env(name: str) -> Optional[int]:
+    v = os.environ.get(name)
+    return int(v) if v is not None else None
+
+
+def host_client_slice(mesh) -> tuple[int, int]:
+    """[start, stop) client ids whose data-axis slices have devices on this
+    host — the range of client datasets this host must materialize."""
+    axes = [a for a in mesh.axis_names if a in ("pod", "data")]
+    if not axes:
+        return 0, 1
+    local = set(d.id for d in jax.local_devices())
+    dev_grid = mesh.devices
+    names = list(mesh.axis_names)
+    # collapse non-client axes: a client index is the flattened (pod, data)
+    # coordinate; it is "local" if any of its devices is local
+    client_axes_idx = [names.index(a) for a in axes]
+    other_idx = [i for i in range(dev_grid.ndim) if i not in client_axes_idx]
+    perm = client_axes_idx + other_idx
+    grid = np.transpose(np.vectorize(lambda d: d.id)(dev_grid), perm)
+    n_clients = 1
+    for a in axes:
+        n_clients *= mesh.shape[a]
+    flat = grid.reshape(n_clients, -1)
+    mine = [i for i in range(n_clients)
+            if any(int(x) in local for x in flat[i])]
+    if not mine:
+        return 0, 0
+    return min(mine), max(mine) + 1
+
+
+def is_coordinator() -> bool:
+    return jax.process_index() == 0
+
+
+def sync_global_devices(tag: str) -> None:
+    """Barrier across hosts (checkpoint boundaries, round epochs)."""
+    if jax.process_count() == 1:
+        return
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(tag)

@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, SPMD-partitions and compiles on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--out results.json]
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per combo we record: compile ok, memory_analysis (per-device bytes),
+cost_analysis (FLOPs / bytes), collective bytes by kind, and the three-term
+roofline (§Roofline in EXPERIMENTS.md).  Nothing is executed and no real
+buffer is allocated — inputs are ShapeDtypeStructs.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import ARCHS, get_arch
+from repro.configs.shapes import LONG_CONTEXT_OK, SHAPES
+from repro.launch import serve as serve_lib
+from repro.launch import specs as specs_lib
+from repro.launch import train as train_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as roofline
+
+
+def shape_kind(shape_name: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "long"}[shape_name]
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("pure full attention at 524k decode — sub-quadratic variants "
+                "only (DESIGN.md §4)")
+    return None
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool,
+              k_max: int = 4, algo: str = "fedagrac",
+              keep_hlo: bool = False, variant: str = "tp16") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if variant != "tp16":
+        mesh_name += f"/{variant}"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "algo": algo}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    cfg = specs_lib.bf16_config(get_arch(arch))
+    shape = SHAPES[shape_name]
+    if variant == "auto":
+        from repro.launch.mesh import recommended_variant
+        variant = recommended_variant(cfg)
+        rec["mesh"] = mesh_name.split("/")[0] + f"/auto->{variant}"
+    mesh = make_production_mesh(multi_pod=multi_pod, variant=variant)
+    chips = mesh.devices.size
+    kind = shape_kind(shape_name)
+    t0 = time.time()
+    try:
+        if kind == "train":
+            fed = FedConfig(algorithm=algo, n_clients=0)  # M from mesh
+            lowered, bundle = train_lib.lower_train(cfg, shape, mesh, fed,
+                                                    k_max=k_max)
+            tokens = shape.global_batch * shape.seq_len * k_max
+            model_flops = roofline.train_model_flops(cfg, tokens)
+        elif kind == "prefill":
+            lowered, bundle = serve_lib.lower_serve(cfg, shape, mesh,
+                                                    kind="prefill")
+            model_flops = roofline.prefill_model_flops(
+                cfg, shape.global_batch * shape.seq_len)
+        else:
+            lowered, bundle = serve_lib.lower_serve(cfg, shape, mesh,
+                                                    kind=kind)
+            model_flops = roofline.decode_model_flops(cfg, shape.global_batch)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        hlo = compiled.as_text()
+        rl = roofline.from_compiled(compiled, chips, model_flops, hlo_text=hlo)
+        rec["roofline"] = rl.as_dict()
+        rec["memory"] = roofline.memory_stats(compiled)
+        rec["status"] = "ok"
+        if keep_hlo:
+            rec["hlo_len"] = len(hlo)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch, shape) on this mesh")
+    ap.add_argument("--k-max", type=int, default=4)
+    ap.add_argument("--algo", default="fedagrac")
+    ap.add_argument("--mesh-variant", default="tp16",
+                    choices=("tp16", "2d", "auto"))
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    combos = ([(a, s) for a in sorted(ARCHS) for s in SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("--arch and --shape required (or --all)")
+
+    for arch, shape_name in combos:
+        rec = run_combo(arch, shape_name, multi_pod=args.multi_pod,
+                        k_max=args.k_max, algo=args.algo,
+                        variant=args.mesh_variant)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            rl = rec["roofline"]
+            extra = (f" compute={rl['t_compute_s']:.3e}s"
+                     f" memory={rl['t_memory_s']:.3e}s"
+                     f" coll={rl['t_collective_s']:.3e}s"
+                     f" dominant={rl['dominant']}")
+        elif status == "failed":
+            extra = " " + rec["error"]
+        elif status == "skipped":
+            extra = " " + rec["reason"]
+        print(f"[{status:7s}] {arch:24s} {shape_name:12s} "
+              f"{rec['mesh']:8s}{extra}", flush=True)
+        if rec.get("traceback") and not args.out:
+            print(rec["traceback"])
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

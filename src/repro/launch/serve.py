@@ -1,0 +1,67 @@
+"""Pod-scale serving steps: prefill (prompt → KV caches + last logits) and
+decode (one token against a seq_len cache, optionally sequence-sharded for
+long contexts)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import set_mesh_rules
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import mesh_rules
+from repro.models.model import serve_decode, serve_prefill
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    set_mesh_rules(mesh, mesh_rules(mesh, kind="prefill"))
+    bundle = specs_lib.serve_specs(cfg, shape, mesh, kind="prefill")
+    sh = lambda t: specs_lib.to_shardings(t, mesh)
+
+    def step(params, batch, caches):
+        return serve_prefill(params, batch, cfg, caches=caches)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh(bundle["param_ps"]), sh(bundle["batch_ps"]),
+                      sh(bundle["cache_ps"])),
+        out_shardings=(None, sh(bundle["cache_ps"])),
+    )
+    return jitted, bundle
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                 kind: str = "decode"):
+    """kind "decode" (batch over data) or "long" (cache seq over data)."""
+    set_mesh_rules(mesh, mesh_rules(mesh, kind=kind))
+    bundle = specs_lib.serve_specs(cfg, shape, mesh, kind=kind)
+    sh = lambda t: specs_lib.to_shardings(t, mesh)
+    seq_shard = kind == "long"
+
+    def step(params, batch, caches, pos_offset):
+        return serve_decode(params, batch, caches, pos_offset, cfg,
+                            seq_shard=seq_shard)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh(bundle["param_ps"]), sh(bundle["batch_ps"]),
+                      sh(bundle["cache_ps"]), None),
+        out_shardings=(None, sh(bundle["cache_ps"])),
+    )
+    return jitted, bundle
+
+
+def lower_serve(cfg: ModelConfig, shape: ShapeConfig, mesh, *, kind: str):
+    with jax.set_mesh(mesh):
+        if kind == "prefill":
+            jitted, bundle = build_prefill(cfg, shape, mesh)
+            lowered = jitted.lower(bundle["params"], bundle["batch"],
+                                   bundle["caches"])
+        else:
+            jitted, bundle = build_decode(cfg, shape, mesh, kind=kind)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(bundle["params"], bundle["batch"],
+                                   bundle["caches"], pos)
+    return lowered, bundle

@@ -1,0 +1,296 @@
+"""Parameter / state / input sharding specs + ShapeDtypeStruct stand-ins.
+
+Everything the dry-run lowers is described here:
+
+* ``param_pspec``        — name-aware tensor-parallel rules for every leaf of
+                           the model zoo (embeddings/vocab, attention heads,
+                           ffn hidden, MoE expert axis, SSM heads, …);
+* ``abstract_params``    — jax.eval_shape'd parameter tree (no allocation);
+* ``train_specs``        — FedaGrac round state + (M, k_max, B, …) batches;
+* ``serve_specs``        — prefill / decode / long-decode inputs + KV caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import rounds
+from repro.core.fedopt import Algorithm
+from repro.launch.mesh import data_axes, model_axes, n_clients
+from repro.models import model as model_lib
+
+PyTree = Any
+
+# last-path-component → preferred shard dim of the *logical* tensor
+# (negative = from the end).  `None` entries fall through to the generic rule.
+_NAME_RULES: dict[str, int] = {
+    # output projections: contract dim holds heads/ffn shards
+    "wo": -2, "out_proj": -2, "down": -2, "ff_down": -2,
+    # input projections: output dim holds heads/ffn shards
+    "wq": -1, "wk": -1, "wv": -1, "w_kv_up": -1, "up": -1, "ff_up": -1,
+    "in_proj": -1, "W": -1, "w_gates": -1,
+    # embeddings / lm heads: shard the vocab axis
+    "embed": -2, "head": -1, "heads": -1,
+    # sLSTM block-diagonal recurrence: shard heads
+    "R": -3,
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _stack_dims(path) -> int:
+    """Leading scan-stack dims: segments params carry (n_groups, count)."""
+    for p in path:
+        if hasattr(p, "key") and str(p.key) == "segments":
+            return 2
+    return 0
+
+
+def param_pspec(path, shape: tuple[int, ...], model_size: int) -> P:
+    """PartitionSpec over the `model` mesh axis for one parameter leaf."""
+    name = _leaf_name(path)
+    stack = _stack_dims(path)
+    logical = len(shape) - stack
+    spec: list[Optional[str]] = [None] * len(shape)
+    if model_size <= 1 or logical <= 0:
+        return P(*spec)
+
+    def try_dim(d: int) -> bool:
+        if -logical <= d < 0:
+            d = len(shape) + d
+        elif d < stack:
+            return False
+        if shape[d] % model_size == 0 and shape[d] >= model_size:
+            spec[d] = "model"
+            return True
+        return False
+
+    # MoE expert tensors: shard the expert axis first (expert parallelism)
+    if name in ("w_in", "w_gate", "w_out") and logical == 3:
+        if try_dim(-3) or try_dim(-1 if name != "w_out" else -2):
+            return P(*spec)
+    if name in ("w_in", "w_gate"):
+        if try_dim(-1):
+            return P(*spec)
+    if name == "w_out":
+        if try_dim(-2):
+            return P(*spec)
+    rule = _NAME_RULES.get(name)
+    if rule is not None and try_dim(rule):
+        return P(*spec)
+    # generic fallback: largest logical dim that divides
+    order = sorted(range(stack, len(shape)), key=lambda d: -shape[d])
+    for d in order:
+        if try_dim(d - len(shape)):
+            return P(*spec)
+    return P(*spec)
+
+
+def _prepend(pspec: P, axes) -> P:
+    return P(axes if axes else None, *pspec)
+
+
+def tree_pspecs(tree: PyTree, model_size: int,
+                client_axes: tuple[str, ...] = ()) -> PyTree:
+    """Map every leaf to its PartitionSpec (optionally client-stacked)."""
+    def one(path, leaf):
+        ps = param_pspec(path, leaf.shape[1:] if client_axes else leaf.shape,
+                         model_size)
+        return _prepend(ps, client_axes) if client_axes else ps
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def to_shardings(pspecs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# abstract params / state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    fn = functools.partial(model_lib.init_params, cfg=cfg)
+    return jax.eval_shape(lambda key: fn(key), jax.random.PRNGKey(0))
+
+
+def abstract_state(cfg: ModelConfig, algo: Algorithm, m: int) -> PyTree:
+    params = abstract_params(cfg)
+    return jax.eval_shape(
+        lambda p: rounds.init_state(p, m, algo), params)
+
+
+def state_pspecs(state: PyTree, mesh) -> PyTree:
+    """Sharding for the round-engine state dict."""
+    msize = 1
+    for a in model_axes(mesh):
+        msize *= mesh.shape[a]
+    cl = data_axes(mesh)
+    out = {"params": tree_pspecs(state["params"], msize),
+           "round": P()}
+    if "nu" in state:
+        out["nu"] = tree_pspecs(state["nu"], msize)
+        out["nu_i"] = tree_pspecs(state["nu_i"], msize, client_axes=cl)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch stand-ins
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _client_batch(cfg: ModelConfig, b: int, s: int, *, labels: bool) -> dict:
+    """Per-microbatch model inputs (no leading client/step dims)."""
+    if cfg.frontend == "audio":
+        out = {"codes": _sds((b, cfg.n_codebooks, s), jnp.int32)}
+        if labels:
+            out["labels"] = _sds((b, cfg.n_codebooks, s), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        out = {"embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+               "positions": _sds((b, 3, s), jnp.int32)}
+        if labels:
+            out["labels"] = _sds((b, s), jnp.int32)
+        return out
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if labels:
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, algo: Algorithm,
+                k_max: int = 4) -> dict:
+    """Round inputs: state, batches (M, k_max, B_local, …), k_steps, weights."""
+    m = n_clients(mesh)
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b_local = shape.global_batch // m
+    micro = _client_batch(cfg, b_local, shape.seq_len, labels=True)
+    batches = jax.tree.map(
+        lambda x: _sds((m, k_max) + x.shape, x.dtype), micro)
+    state = abstract_state(cfg, algo, m)
+
+    cl = data_axes(mesh)
+    # 2d mesh variant: microbatch dim (M, k, B, …) additionally sharded over
+    # the per-client "batch" axis (§Perf #4)
+    has_batch = "batch" in mesh.axis_names
+    def _bspec(x):
+        spec = [cl if cl else None] + [None] * (x.ndim - 1)
+        if has_batch and x.ndim >= 3 and x.shape[2] % mesh.shape["batch"] == 0:
+            spec[2] = "batch"
+        return P(*spec)
+    batch_ps = jax.tree.map(_bspec, batches)
+    specs = {
+        "state": state,
+        "batches": batches,
+        "k_steps": _sds((m,), jnp.int32),
+        "weights": _sds((m,), jnp.float32),
+    }
+    pspecs = {
+        "state": state_pspecs(state, mesh),
+        "batches": batch_ps,
+        "k_steps": P(),
+        "weights": P(),
+    }
+    return {"specs": specs, "pspecs": pspecs, "m": m, "b_local": b_local}
+
+
+# ---------------------------------------------------------------------------
+# serve stand-ins (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path, shape: tuple[int, ...], mesh, *, kind: str) -> P:
+    """KV/SSM cache sharding.  Caches are stacked (n_groups, count, …leaf)."""
+    name = _leaf_name(path)
+    stack = 2
+    msize = 1
+    for a in model_axes(mesh):
+        msize *= mesh.shape[a]
+    d_ax = data_axes(mesh)
+    dsize = 1
+    for a in d_ax:
+        dsize *= mesh.shape[a]
+    spec: list = [None] * len(shape)
+    if name in ("pos", "idx"):
+        return P(*spec)
+    bdim = stack
+    seq_dim = stack + 1
+    if kind == "long":
+        # batch=1: shard the cache sequence axis over the data axes
+        if name in ("k", "v", "ckv", "krope") and shape[seq_dim] % max(dsize, 1) == 0:
+            spec[seq_dim] = d_ax if len(d_ax) > 1 else d_ax[0]
+    else:
+        if d_ax and shape[bdim] % dsize == 0 and shape[bdim] >= dsize:
+            spec[bdim] = d_ax if len(d_ax) > 1 else d_ax[0]
+    # model axis: prefer the head-like dim, else any remaining divisible dim
+    prefer = {"k": stack + 2, "v": stack + 2, "ssm": stack + 1,
+              "C": stack + 1, "n": stack + 1, "m": stack + 1,
+              "conv": stack + 2, "ckv": None, "krope": None}
+    cand = prefer.get(name, None)
+    dims = ([cand] if cand is not None else []) + [
+        d for d in range(stack, len(shape)) if spec[d] is None]
+    for d in dims:
+        if d is None or d >= len(shape) or spec[d] is not None:
+            continue
+        if shape[d] % msize == 0 and shape[d] >= msize:
+            spec[d] = "model"
+            break
+    return P(*spec)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch, max_len,
+                                      jnp.dtype(cfg.dtype)))
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                kind: str) -> dict:
+    """kind: "prefill" | "decode" | "long"."""
+    msize = 1
+    for a in model_axes(mesh):
+        msize *= mesh.shape[a]
+    params = abstract_params(cfg)
+    param_ps = tree_pspecs(params, msize)
+    b = shape.global_batch
+    if kind == "prefill":
+        batch = _client_batch(cfg, b, shape.seq_len, labels=False)
+        d_ax = data_axes(mesh)
+        batch_ps = jax.tree.map(
+            lambda x: P(d_ax if d_ax else None, *([None] * (x.ndim - 1))),
+            batch)
+        caches = abstract_caches(cfg, b, shape.seq_len)
+        cache_ps = jax.tree_util.tree_map_with_path(
+            lambda p, x: cache_pspec(p, x.shape, mesh, kind="prefill"),
+            caches)
+        return {"params": params, "param_ps": param_ps, "batch": batch,
+                "batch_ps": batch_ps, "caches": caches, "cache_ps": cache_ps}
+    # decode: one token against a seq_len cache
+    batch = _client_batch(cfg, b, 1, labels=False)
+    d_ax = data_axes(mesh)
+    lead = (d_ax if d_ax else None) if kind == "decode" else None
+    batch_ps = jax.tree.map(
+        lambda x: P(lead, *([None] * (x.ndim - 1))), batch)
+    caches = abstract_caches(cfg, b, shape.seq_len)
+    cache_ps = jax.tree_util.tree_map_with_path(
+        lambda p, x: cache_pspec(p, x.shape, mesh, kind=kind), caches)
+    return {"params": params, "param_ps": param_ps, "batch": batch,
+            "batch_ps": batch_ps, "caches": caches, "cache_ps": cache_ps}
+
+
+def bf16_config(cfg: ModelConfig) -> ModelConfig:
+    """Production numerics: bf16 params/activations for the dry-run."""
+    return dataclasses.replace(cfg, dtype="bfloat16")

@@ -1,0 +1,6 @@
+from repro.models.model import (cross_entropy, forward, group_spec,
+                                init_caches, init_params, lm_loss,
+                                serve_decode, serve_prefill)
+
+__all__ = ["cross_entropy", "forward", "group_spec", "init_caches",
+           "init_params", "lm_loss", "serve_decode", "serve_prefill"]

@@ -1,0 +1,126 @@
+"""Shared low-level layers: norms, initializers, rotary embeddings (RoPE,
+partial RoPE for MLA, M-RoPE for Qwen2-VL)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(key, d: int, kind: str, dtype):
+    del key
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params, x, kind: str, eps: float):
+    if kind == "rms":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.relu(x)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    """(dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, dim/2)."""
+    inv = rope_freqs(dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, H, D) with D even; angles (B, S, D/2) or (S, D/2).
+
+    Rotates pairs (x[..., :D/2], x[..., D/2:]) — the "rotate_half" layout
+    used by Llama/Gemma/Qwen.
+    """
+    dt = x.dtype
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2].astype(jnp.float32), x[..., d2:].astype(jnp.float32)
+    if angles.ndim == 2:          # (S, D/2) broadcast over batch
+        cos = jnp.cos(angles)[None, :, None, :]
+        sin = jnp.sin(angles)[None, :, None, :]
+    else:                          # (B, S, D/2)
+        cos = jnp.cos(angles)[:, :, None, :]
+        sin = jnp.sin(angles)[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_angles(positions: jax.Array, dim: int, theta: float,
+                 sections: tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL).
+
+    positions: (3, B, S) — temporal / height / width position ids.
+    sections:  per-axis number of *frequency pairs*; sum == dim // 2.
+    Returns angles (B, S, dim/2) where frequency slot j uses the position id
+    of the axis that owns slot j.
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    inv = rope_freqs(dim, theta)                       # (dim/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (3, B, S, dim/2)
+    parts = []
+    start = 0
+    for axis, width in enumerate(sections):
+        parts.append(ang[axis, :, :, start:start + width])
+        start += width
+    return jnp.concatenate(parts, axis=-1)             # (B, S, dim/2)

@@ -1,0 +1,185 @@
+"""Mamba2 (State-Space Duality) block — chunked-parallel training scan,
+O(1)-state recurrent decode.  Follows the SSD "minimal" formulation of
+Dao & Gu (2024), adapted to jnp + logical sharding (heads over ``mp``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": dense_init(keys[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(keys[1], (s.d_conv, conv_ch), jnp.float32)
+                   * (1.0 / s.d_conv) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(keys[2], d_in, d, dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) -> (..., L, L) with entry [z, s] = sum_{j=s+1..z} x_j
+    (lower triangle incl. diagonal = 0; -inf above)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x (b, l, h, p); dt (b, l, h) (post-softplus); A (h,) negative;
+    B, C (b, l, g, n) with g groups broadcast over heads.
+    Returns y (b, l, h, p), final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    L = min(chunk, l)
+    assert l % L == 0, (l, L)
+    c = l // L
+    rep = h // g
+
+    xb = (x * dt[..., None]).reshape(b, c, L, h, p).astype(jnp.float32)
+    dA = (dt * A[None, None, :]).reshape(b, c, L, h)          # (b,c,L,h)
+    Bc = jnp.repeat(B.reshape(b, c, L, g, n), rep, axis=3).astype(jnp.float32)
+    Cc = jnp.repeat(C.reshape(b, c, L, g, n), rep, axis=3).astype(jnp.float32)
+
+    dA_t = dA.transpose(0, 1, 3, 2)                           # (b,c,h,L)
+    cum = jnp.cumsum(dA_t, axis=-1)                           # (b,c,h,L)
+    Lmat = jnp.exp(_segsum(dA_t))                             # (b,c,h,L,L)
+
+    # intra-chunk (diagonal blocks)
+    CB = jnp.einsum("bczhn,bcshn->bchzs", Cc, Bc)
+    y_diag = jnp.einsum("bchzs,bcshp->bczhp", CB * Lmat, xb)
+
+    # per-chunk final states
+    decay_end = jnp.exp(cum[..., -1:] - cum)                  # (b,c,h,L)
+    S_chunk = jnp.einsum("bcshn,bchs,bcshp->bchpn", Bc,
+                         decay_end, xb)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                       # (b,c,h)
+
+    def scan_fn(S_prev, inp):
+        S_c, dec = inp
+        S_new = S_c + dec[..., None, None] * S_prev
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_last, S_prevs = jax.lax.scan(
+        scan_fn, S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)                # (b,c,h,p,n)
+
+    # inter-chunk (off-diagonal) contribution
+    y_off = jnp.einsum("bczhn,bchz,bchpn->bczhp", Cc, jnp.exp(cum), S_prevs)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, S_last
+
+
+def mamba(params: dict, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    """x (B, S, d) -> (y (B, S, d), cache)."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    B_, S_, d = x.shape
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: d_in + conv_ch]
+    dt_raw = zxbcdt[..., d_in + conv_ch:]                     # (B,S,nh)
+
+    new_cache = None
+    if cache is None or S_ > 1:
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        if cache is not None:                                  # prefill
+            K = params["conv_w"].shape[0]
+            new_cache = {"conv": xbc_raw[:, -(K - 1):, :]}
+    else:
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, C)
+        xbc = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+               + params["conv_b"].astype(jnp.float32))[:, None, :].astype(x.dtype)
+        new_cache = {"conv": window[:, 1:, :]}
+    xbc = jax.nn.silu(xbc)
+
+    xs = xbc[..., :d_in].reshape(B_, S_, nh, P)
+    Bm = xbc[..., d_in: d_in + G * N].reshape(B_, S_, G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(B_, S_, G, N)
+    xs = constrain(xs, "dp", None, "mp", None)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+
+    if cache is None or S_ > 1:
+        y, S_last = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk)
+        if new_cache is not None:
+            new_cache["ssm"] = S_last
+    else:
+        # single-step recurrence
+        rep = nh // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1).astype(jnp.float32)   # (B,nh,N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1).astype(jnp.float32)
+        x0 = xs[:, 0].astype(jnp.float32)                             # (B,nh,P)
+        dt0 = dt[:, 0]                                                # (B,nh)
+        decay = jnp.exp(dt0 * A[None, :])                             # (B,nh)
+        Snew = (decay[..., None, None] * cache["ssm"]
+                + jnp.einsum("bhp,bhn->bhpn", x0 * dt0[..., None], Bh))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, Snew)[:, None]
+        new_cache["ssm"] = Snew
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, S_, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, new_cache

@@ -1,0 +1,39 @@
+"""Dense feed-forward: GLU (SwiGLU / GeGLU) or vanilla 2-layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain
+from repro.models.layers import activation, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_in": dense_init(k1, d, f, dtype),
+         "w_out": dense_init(k2, f, d, dtype)}
+    if cfg.glu:
+        p["w_gate"] = dense_init(k3, d, f, dtype)
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((f,), dtype)
+        p["b_out"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if cfg.mlp_bias:
+        h = h + params["b_in"]
+    if cfg.glu:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = activation(g, cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    h = constrain(h, "dp", None, "mp")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    if cfg.mlp_bias:
+        y = y + params["b_out"]
+    return y

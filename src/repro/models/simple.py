@@ -1,0 +1,110 @@
+"""Small models matching the paper's experimental suite:
+
+* logistic regression (convex — a9a / Fashion-MNIST LR experiments)
+* MLP and 2-layer CNN (non-convex — Fashion-MNIST CNN experiments)
+* quadratic objectives with a closed-form optimum (Theorem 1/3 validation)
+
+All are functional: ``init(key, ...) -> params``, ``loss(params, batch) -> scalar``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import cross_entropy
+
+
+# -- logistic regression ----------------------------------------------------
+
+def lr_init(key, n_features: int, n_classes: int) -> dict:
+    return {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def lr_loss(params: dict, batch: dict) -> jax.Array:
+    logits = batch["x"] @ params["w"] + params["b"]
+    return cross_entropy(logits, batch["y"])
+
+
+# -- MLP ---------------------------------------------------------------------
+
+def mlp_init(key, n_features: int, hidden: int, n_classes: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (n_features, hidden)) * (2.0 / n_features) ** 0.5,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_classes)) * (2.0 / hidden) ** 0.5,
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_loss(params: dict, batch: dict) -> jax.Array:
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    return cross_entropy(logits, batch["y"])
+
+
+def mlp_accuracy(params: dict, batch: dict) -> jax.Array:
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+
+def lr_accuracy(params: dict, batch: dict) -> jax.Array:
+    logits = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+
+# -- 2-layer CNN (paper Table 3, adapted to 28x28x1 synthetic images) ---------
+
+def cnn_init(key, n_classes: int = 10) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": jax.random.normal(ks[0], (5, 5, 1, 10)) * 0.1,
+        "c2": jax.random.normal(ks[1], (5, 5, 10, 20)) * 0.1,
+        "w1": jax.random.normal(ks[2], (320, 50)) * (2.0 / 320) ** 0.5,
+        "b1": jnp.zeros((50,)),
+        "w2": jax.random.normal(ks[3], (50, n_classes)) * (2.0 / 50) ** 0.5,
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def _cnn_logits(params: dict, x: jax.Array) -> jax.Array:
+    def conv(h, w):
+        return jax.lax.conv_general_dilated(
+            h, w, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    def pool(h):
+        return jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    h = pool(jax.nn.relu(conv(x, params["c1"])))          # (B,12,12,10)
+    h = pool(jax.nn.relu(conv(h, params["c2"])))          # (B,4,4,20)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def cnn_loss(params: dict, batch: dict) -> jax.Array:
+    return cross_entropy(_cnn_logits(params, batch["x"]), batch["y"])
+
+
+def cnn_accuracy(params: dict, batch: dict) -> jax.Array:
+    return jnp.mean(jnp.argmax(_cnn_logits(params, batch["x"]), -1) == batch["y"])
+
+
+# -- client quadratics (Theorem 1 / 3 closed forms) ---------------------------
+
+def quad_loss(params: dict, batch: dict) -> jax.Array:
+    """F_i(x) = 0.5 ||A x - b||^2 + c0, strongly convex, non-negative."""
+    x = params["x"]
+    r = batch["A"] @ x - batch["b"]
+    return 0.5 * jnp.dot(r, r) + batch["c0"]
+
+
+def quad_global_opt(As: jax.Array, bs: jax.Array, weights: jax.Array) -> jax.Array:
+    """argmin Σ_i w_i * 0.5||A_i x − b_i||² = (Σ w_i A_iᵀA_i)⁻¹ Σ w_i A_iᵀ b_i."""
+    H = jnp.einsum("i,iab,iac->bc", weights, As, As)
+    g = jnp.einsum("i,iab,ia->b", weights, As, bs)
+    return jnp.linalg.solve(H, g)

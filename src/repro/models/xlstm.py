@@ -1,0 +1,258 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517).
+
+mLSTM: matrix-memory LSTM with exponential gating.  Training uses the
+stabilized *parallel* form — exactly equivalent to the recurrence because the
+stabilizer m_t = F_t + cummax(log i_s − F_s) equals the recurrent running max
+(see tests/test_xlstm.py).  Decode is the O(1)-state recurrence.
+
+sLSTM: scalar-memory LSTM with block-diagonal recurrent weights — inherently
+sequential, trained with lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+def _mdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    assert x is not None
+    d_in = int(x.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    return x, d_in, H, d_in // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    x, d_in, H, hd = _mdims(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "up": dense_init(keys[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(keys[1], (x.conv_dim, d_in), jnp.float32)
+                   * (1.0 / x.conv_dim) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(keys[2], d_in, d_in, dtype),
+        "wk": dense_init(keys[3], d_in, d_in, dtype),
+        "wv": dense_init(keys[4], d_in, d_in, dtype),
+        "w_gates": dense_init(keys[5], d_in, 2 * H, jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                    3.0 + jnp.arange(H, dtype=jnp.float32)]),
+        "out_norm": jnp.zeros((d_in,), dtype),
+        "down": dense_init(keys[6], d_in, d, dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    x, d_in, H, hd = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, x.conv_dim - 1, d_in), dtype),
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def _conv_causal(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype), (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f, block_q: int = 256):
+    """q,k,v (B,S,H,hd); log_i, log_f (B,S,H).  Stabilized parallel form."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    F = jnp.cumsum(log_f, axis=1)                   # (B,S,H)
+    a = log_i - F                                   # log ĩ_s − F_s
+    amax = jax.lax.cummax(a, axis=1)                # running max
+    m = F + amax                                    # recurrent-equal stabilizer
+
+    kf = (k.astype(jnp.float32) * scale)
+    vf = v.astype(jnp.float32)
+    bq = min(block_q, S)
+    nb = -(-S // bq)
+    pad = nb * bq - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        F = jnp.pad(F, ((0, 0), (0, pad), (0, 0)))
+        amax = jnp.pad(amax, ((0, 0), (0, pad), (0, 0)))
+    qb = q.reshape(B, nb, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    ab = amax.reshape(B, nb, bq, H).transpose(1, 0, 2, 3)
+    pos = jnp.arange(nb * bq).reshape(nb, bq)
+    s_pos = jnp.arange(S)
+
+    def body(_, inp):
+        qi, amax_i, pi = inp
+        sc = jnp.einsum("bqhd,bshd->bhqs", qi.astype(jnp.float32), kf)
+        dec = jnp.exp(a.transpose(0, 2, 1)[:, :, None, :]
+                      - amax_i.transpose(0, 2, 1)[:, :, :, None])   # (B,H,q,s)
+        mask = s_pos[None, :] <= pi[:, None]
+        st = sc * dec * mask[None, None]
+        num = jnp.einsum("bhqs,bshd->bqhd", st, vf)
+        den = jnp.abs(jnp.sum(st, axis=-1)).transpose(0, 2, 1)      # (B,q,H)
+        return None, (num, den)
+
+    _, (nums, dens) = jax.lax.scan(body, None, (qb, ab, pos))
+    num = nums.transpose(1, 0, 2, 3, 4).reshape(B, nb * bq, H, hd)[:, :S]
+    den = dens.transpose(1, 0, 2, 3).reshape(B, nb * bq, H)[:, :S]
+    den = jnp.maximum(den, jnp.exp(-m))
+    return num / den[..., None]
+
+
+def mlstm(params: dict, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    xx, d_in, H, hd = _mdims(cfg)
+    B, S, d = x.shape
+    up = jnp.einsum("bsd,de->bse", x, params["up"])
+    h_path, z = up[..., :d_in], up[..., d_in:]
+
+    new_cache = None
+    if cache is None or S > 1:
+        conv_out = _conv_causal(h_path, params["conv_w"], params["conv_b"])
+        if cache is not None:                                  # prefill
+            K = params["conv_w"].shape[0]
+            new_cache = {"conv": h_path[:, -(K - 1):]}
+    else:
+        window = jnp.concatenate([cache["conv"], h_path], axis=1)
+        conv_out = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                               params["conv_w"].astype(jnp.float32))
+                    + params["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+        new_cache = {"conv": window[:, 1:]}
+    conv_out = jax.nn.silu(conv_out)
+
+    q = jnp.einsum("bse,ef->bsf", conv_out, params["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", conv_out, params["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bse,ef->bsf", h_path, params["wv"]).reshape(B, S, H, hd)
+    gates = (jnp.einsum("bse,eg->bsg", h_path.astype(jnp.float32),
+                        params["w_gates"]) + params["b_gates"])
+    log_i = gates[..., :H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+
+    if cache is None or S > 1:
+        h = _mlstm_parallel(q, k, v, log_i, log_f)
+        if new_cache is not None:                   # prefill: closed-form state
+            scale = hd ** -0.5
+            F = jnp.cumsum(log_f, axis=1)
+            a = log_i - F                                       # (B,S,H)
+            amax = jnp.max(a, axis=1)                           # (B,H)
+            w = jnp.exp(a - amax[:, None])                      # (B,S,H)
+            kf = k.astype(jnp.float32) * scale
+            vf = v.astype(jnp.float32)
+            new_cache["C"] = jnp.einsum("bsh,bshd,bshe->bhde", w, kf, vf)
+            new_cache["n"] = jnp.einsum("bsh,bshd->bhd", w, kf)
+            new_cache["m"] = F[:, -1] + amax
+    else:
+        scale = hd ** -0.5
+        m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+        li, lf = log_i[:, 0], log_f[:, 0]                       # (B,H)
+        m_new = jnp.maximum(lf + m_prev, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m_prev - m_new)
+        k0 = k[:, 0].astype(jnp.float32) * scale
+        v0 = v[:, 0].astype(jnp.float32)
+        q0 = q[:, 0].astype(jnp.float32)
+        C_new = (f_s[..., None, None] * C_prev
+                 + i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", k0, v0))
+        n_new = f_s[..., None] * n_prev + i_s[..., None] * k0
+        num = jnp.einsum("bhd,bhde->bhe", q0, C_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q0)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None])[:, None].reshape(B, 1, H, hd)
+        new_cache.update({"C": C_new, "n": n_new, "m": m_new})
+
+    h = h.reshape(B, S, d_in).astype(x.dtype)
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, params["down"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    keys = jax.random.split(key, 5)
+    f_ff = 2 * d
+    return {
+        "W": dense_init(keys[0], d, 4 * d, jnp.float32),
+        "R": (jax.random.normal(keys[1], (H, hd, 4 * hd), jnp.float32)
+              * (1.0 / hd) ** 0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.ones((d,), jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "out_norm": jnp.zeros((d,), dtype),
+        "ff_up": dense_init(keys[2], d, 2 * f_ff, dtype),
+        "ff_down": dense_init(keys[3], f_ff, d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    del dtype
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(params, cfg, state, wx):
+    """One sLSTM timestep.  wx (B, 4d) = W x_t + b;  state c/n/h/m (B, d)."""
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    c, n, h, m = state
+    B = wx.shape[0]
+    rec = jnp.einsum("bhp,hpq->bhq", h.reshape(B, H, hd), params["R"])
+    pre = wx + rec.reshape(B, 4 * d)
+    z_t = jnp.tanh(pre[:, :d])
+    i_t = pre[:, d: 2 * d]
+    f_t = pre[:, 2 * d: 3 * d]
+    o_t = jax.nn.sigmoid(pre[:, 3 * d:])
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z_t
+    n_new = f_s * n + i_s
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm(params: dict, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    wx = (jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["W"])
+          + params["b"])
+    if cache is None:
+        state = (jnp.zeros((B, d), jnp.float32), jnp.ones((B, d), jnp.float32),
+                 jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32))
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    step = lambda st, w: _slstm_step(params, cfg, st, w)
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)
+    new_cache = None if cache is None else dict(zip(("c", "n", "h", "m"), state))
+    h = h.astype(x.dtype)
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", h, params["ff_up"])
+    f_ff = params["ff_down"].shape[0]
+    gate, val = up[..., :f_ff], up[..., f_ff:]
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(gate) * val, params["ff_down"])
+    return y, new_cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import (constant, cosine, lambda_increase,
+                                   step_decay)
+from repro.optim.sgd import SGDState, apply_updates, sgd_init, sgd_update
+
+__all__ = ["AdamWState", "SGDState", "adamw_init", "adamw_update",
+           "apply_updates", "constant", "cosine", "lambda_increase",
+           "sgd_init", "sgd_update", "step_decay"]

@@ -1,0 +1,45 @@
+"""Functional AdamW — used by the centralized-training examples and the
+server-side optimizer variant (FedOpt-style server Adam is a beyond-paper
+extension recorded in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, *,
+                 lr: float, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(m, v, p):
+        mhat = m / bc1
+        vhat = v / bc2
+        u = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                   + weight_decay * p.astype(jnp.float32))
+        return u.astype(p.dtype)
+
+    updates = jax.tree.map(upd, mu, nu, params)
+    return updates, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,47 @@
+"""Learning-rate and calibration-rate schedules.
+
+The paper's Figure 2b "Increase" schedule steps λ upward over rounds
+(0.1 → 0.5 → 1.0); we expose it as ``lambda_increase``.  η schedules cover
+the constant grids used in §6 plus warmup-cosine for the LM examples."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(base: float, total_steps: int, warmup: int = 0,
+           floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def step_decay(base: float, boundaries: tuple[int, ...],
+               factors: tuple[float, ...]):
+    def fn(step):
+        v = jnp.asarray(base, jnp.float32)
+        for b, f in zip(boundaries, factors):
+            v = jnp.where(step >= b, base * f, v)
+        return v
+    return fn
+
+
+def lambda_increase(boundaries: tuple[int, ...] = (50, 150),
+                    values: tuple[float, ...] = (0.1, 0.5, 1.0)):
+    """Paper Fig. 2b: λ = 0.1 for t<50, 0.5 for t<150, then 1.0."""
+    assert len(values) == len(boundaries) + 1
+
+    def fn(t):
+        v = jnp.asarray(values[0], jnp.float32)
+        for b, nxt in zip(boundaries, values[1:]):
+            v = jnp.where(t >= b, nxt, v)
+        return v
+    return fn

@@ -1,0 +1,37 @@
+"""Functional SGD (+momentum, +weight decay) — the paper's local optimizer."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd_init(params: PyTree, momentum: float = 0.0) -> SGDState:
+    if momentum == 0.0:
+        return SGDState(momentum=None)
+    return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(grads: PyTree, state: SGDState, params: PyTree, *,
+               lr: float, momentum: float = 0.0,
+               weight_decay: float = 0.0) -> tuple[PyTree, SGDState]:
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum and state.momentum is not None:
+        new_m = jax.tree.map(lambda m, g: momentum * m + g,
+                             state.momentum, grads)
+        updates = jax.tree.map(lambda m: -lr * m, new_m)
+        return updates, SGDState(momentum=new_m)
+    updates = jax.tree.map(lambda g: -lr * g, grads)
+    return updates, state
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

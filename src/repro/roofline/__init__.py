@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     collective_bytes, decode_model_flops,
+                                     from_compiled, memory_stats,
+                                     prefill_model_flops, train_model_flops)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "collective_bytes",
+           "decode_model_flops", "from_compiled", "memory_stats",
+           "prefill_model_flops", "train_model_flops"]

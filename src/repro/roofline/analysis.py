@@ -1,0 +1,180 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs / bytes of the SPMD-partitioned module
+(per-device program).  Collective bytes are NOT in cost_analysis — we parse
+the optimized HLO (``compiled.as_text()``) and sum the shaped-buffer sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# --- TPU v5e -----------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~uni-directional)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped buffer: f32[8,128]{1,0:...} — captures dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO op line: "%name = <shape-or-tuple> opcode(" / "name = ... opcode("
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-buffer bytes per collective kind over the module.
+
+    ``-done`` ops repeat the ``-start`` shape; we count starts (or the plain
+    op) only."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:          # async completion, shape already counted
+            continue
+        shape_part, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_part)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                      # per-device HLO flops (trip-weighted)
+    bytes_accessed: float             # per-device HLO bytes (trip-weighted)
+    coll_bytes: dict[str, int]        # per-device collective bytes by kind
+    chips: int
+    model_flops: float = 0.0          # 6·N·D useful flops (whole step, global)
+    xla_flops: float = 0.0            # raw cost_analysis (loop bodies once)
+    xla_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes.values()) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips × HLO_FLOPs) — remat/redundancy waste."""
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / (self.chips * self.flops)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "collective_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "xla_flops": self.xla_flops,
+            "xla_bytes": self.xla_bytes,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Trip-count-aware roofline from the optimized HLO (see hlo.py).
+
+    ``compiled.cost_analysis()`` counts while bodies once, so scanned layers
+    and local-step loops vanish from it — we keep its numbers only as
+    ``xla_*`` reference fields."""
+    from repro.roofline import hlo as hlo_mod
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_mod.analyze(text)
+    rl = Roofline(flops=cost.flops, bytes_accessed=cost.bytes_accessed,
+                  coll_bytes={k: int(v) for k, v in cost.coll_bytes.items()},
+                  chips=chips, model_flops=model_flops)
+    try:
+        xla = compiled.cost_analysis()
+        if isinstance(xla, (list, tuple)):
+            xla = xla[0]
+        rl.xla_flops = float(xla.get("flops", 0.0))
+        rl.xla_bytes = float(xla.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    return rl
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6·N·D) helpers
+# ---------------------------------------------------------------------------
+
+def train_model_flops(cfg, tokens: int) -> float:
+    """6·N_active·D for one FedaGrac round (all clients, all local steps)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def prefill_model_flops(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens
+
+
+def decode_model_flops(cfg, batch: int) -> float:
+    return 2.0 * cfg.active_param_count() * batch
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

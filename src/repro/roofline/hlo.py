@@ -1,0 +1,430 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while body ONCE — a scanned
+48-layer model looks 48× too cheap, and collectives inside the local-step
+loop vanish.  The optimized HLO carries ``known_trip_count`` on every
+bounded while, so we reconstruct true per-device execution counts:
+
+1. split the module into computations (bracket-aware: headers carry
+   tuple-typed params, tuple types carry ``/*index=N*/`` comments);
+2. walk the call graph from ENTRY, multiplying through
+   ``body=…  backend_config={"known_trip_count":{"n":k}}``;
+3. per executed instruction, charge
+     FLOPs   — dots: 2·|out|·K (K from operand shapes + contracting dims),
+               convs: 2·|out|·∏window, elementwise/transcendental: |out|;
+     bytes   — at "body-like" computation level only (ENTRY, while
+               bodies/conds, conditional branches): operand + output buffer
+               sizes per instruction ≈ HBM traffic at fusion boundaries;
+     collective bytes — by kind, output-buffer-size proxy.
+
+Shapes are per-shard (the module is the per-device program), so every total
+is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0,
+    "opaque": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_EQ_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations={([^}]*)}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_WINDOW_RE = re.compile(r"window={[^}]*size=([0-9x]+)")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# bytes-counted but zero-FLOP data movement / reindexing ops
+_MOVEMENT = {
+    "copy", "transpose", "broadcast", "concatenate", "slice",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter", "pad",
+    "reverse", "convert", "reduce-precision", "sort", "rng-bit-generator",
+    "iota", "copy-start", "copy-done",
+}
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "opt-barrier", "domain", "call",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "logistic", "power",
+                   "rsqrt", "sqrt", "cosine", "sine",
+                   "exponential-minus-one", "log-plus-one", "atan2"}
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        total += _numel(dims) * b
+    return total
+
+
+def shape_numel(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            total += _numel(dims)
+    return total
+
+
+def _first_shape_dims(text: str) -> list[int] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _matching_paren(s: str, start: int) -> int:
+    """Index of the ')' matching the '(' at ``start`` (-1 if unbalanced)."""
+    depth = 0
+    for i in range(start, len(s)):
+        ch = s[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list[Instr]
+    shapes: dict[str, str]          # instr/param name -> type text
+
+
+def _parse_header(line: str) -> tuple[str, bool, dict[str, str]] | None:
+    """'%name (p: type, …) -> type {' → (name, is_entry, param shapes)."""
+    stripped = line.strip()
+    if not stripped.endswith("{") or "->" not in line:
+        return None
+    is_entry = stripped.startswith("ENTRY")
+    if is_entry:
+        stripped = stripped[len("ENTRY"):].strip()
+    m = re.match(r"%?([\w.\-]+)\s*\(", stripped)
+    if not m:
+        return None
+    name = m.group(1)
+    p_open = stripped.index("(", m.start())
+    p_close = _matching_paren(stripped, p_open)
+    if p_close < 0:
+        return None
+    params_text = stripped[p_open + 1:p_close]
+    shapes: dict[str, str] = {}
+    depth = 0
+    cur = ""
+    parts = []
+    for ch in params_text:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    for part in parts:
+        if ":" not in part:
+            continue
+        pname, ptype = part.split(":", 1)
+        shapes[pname.strip().lstrip("%")] = ptype.strip()
+    return name, is_entry, shapes
+
+
+def _parse_instr(line: str) -> Instr | None:
+    m = _NAME_EQ_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):                      # tuple-typed result
+        close = _matching_paren(rest, 0)
+        if close < 0:
+            return None
+        shape = rest[:close + 1]
+        tail = rest[close + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        tail = rest[sp:]
+    mo = _OPCODE_RE.match(tail)
+    if not mo:
+        return None
+    return Instr(name, shape, mo.group(1), line)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            hdr = _parse_header(line)
+            if hdr:
+                name, is_entry, shapes = hdr
+                cur = Computation(name, is_entry, [], shapes)
+                if is_entry:
+                    entry = name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        instr = _parse_instr(line)
+        if instr:
+            cur.instrs.append(instr)
+            cur.shapes[instr.name] = instr.shape
+    if cur is not None:
+        comps[cur.name] = cur
+    if not entry and comps:
+        referenced = set()
+        for c in comps.values():
+            for i in c.instrs:
+                for pat in (_BODY_RE, _COND_RE, _CALLS_RE, _TOAPPLY_RE):
+                    mm = pat.search(i.line)
+                    if mm:
+                        referenced.add(mm.group(1))
+        entry = next((n for n in comps if n not in referenced),
+                     next(iter(comps)))
+    return comps, entry
+
+
+def execution_counts(comps: dict[str, Computation], entry: str
+                     ) -> tuple[dict[str, float], set[str]]:
+    """Returns (name → execution count, set of body-like computations).
+
+    Body-like = ENTRY / while bodies / conditional branches: their
+    instructions sit at a fusion boundary, so their buffers model HBM
+    traffic.  Everything reached via calls=/to_apply= is inlined."""
+    counts: dict[str, float] = defaultdict(float)
+    body_like = {entry}
+    stack: list[tuple[str, float]] = [(entry, 1.0)]
+    guard = 0
+    while stack:
+        guard += 1
+        if guard > 500_000:
+            break
+        name, mult = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        counts[name] += mult
+        for i in comp.instrs:
+            if i.opcode == "while":
+                trips = 1.0
+                mt = _TRIP_RE.search(i.line)
+                if mt:
+                    trips = float(mt.group(1))
+                mb = _BODY_RE.search(i.line)
+                mc = _COND_RE.search(i.line)
+                if mb:
+                    body_like.add(mb.group(1))
+                    stack.append((mb.group(1), mult * trips))
+                if mc:
+                    body_like.add(mc.group(1))
+                    stack.append((mc.group(1), mult * (trips + 1)))
+            elif i.opcode == "conditional":
+                names = [mm.group(1) for mm in _BRANCH_RE.finditer(i.line)]
+                mbr = _BRANCHES_RE.search(i.line)
+                if mbr:
+                    names += [n.strip().lstrip("%")
+                              for n in mbr.group(1).split(",")]
+                for n in names:
+                    body_like.add(n)
+                    stack.append((n, mult))
+            elif i.opcode in ("fusion", "call"):
+                mcal = _CALLS_RE.search(i.line) or _TOAPPLY_RE.search(i.line)
+                if mcal:
+                    stack.append((mcal.group(1), mult))
+            # reduce/scatter/sort to_apply bodies are scalar lambdas — skip
+    return dict(counts), body_like
+
+
+def _dot_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    out = shape_numel(instr.shape)
+    args = instr.line.split("(", 1)[1]
+    ops = _OPERAND_RE.findall(args.split(")", 1)[0])
+    mdims = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.line)
+    k = 1
+    if ops and mdims:
+        lhs_shape = shapes.get(ops[0])
+        if lhs_shape:
+            dims = _first_shape_dims(lhs_shape)
+            if dims:
+                for d in mdims.group(1).split(","):
+                    if d and int(d) < len(dims):
+                        k *= dims[int(d)]
+    return 2.0 * out * max(k, 1)
+
+
+def _conv_flops(instr: Instr) -> float:
+    out = shape_numel(instr.shape)
+    mw = _WINDOW_RE.search(instr.line)
+    kelems = 1
+    if mw:
+        for part in mw.group(1).split("x"):
+            kelems *= int(part)
+    return 2.0 * out * kelems
+
+
+_SLICE_LIKE = {"slice", "dynamic-slice", "gather"}
+
+
+def _instr_operands(instr: Instr) -> list[str]:
+    args = instr.line.split("(", 1)[1]
+    stop = args.find("), ")
+    arg_text = args[:stop] if stop > 0 else args
+    return _OPERAND_RE.findall(arg_text)
+
+
+def _fusion_param_charges(comp: Computation) -> dict[int, float]:
+    """Per-parameter-index byte charge for one fusion body.
+
+    A parameter consumed ONLY by slice-like ops is charged at the sliced
+    output size (the scan-over-stacked-layers pattern reads one layer's
+    slice of the stacked weights per iteration, not the whole stack)."""
+    param_names: dict[str, int] = {}
+    for i in comp.instrs:
+        if i.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", i.line)
+            if m:
+                param_names[i.name] = int(m.group(1))
+    charges: dict[int, float] = {}
+    for pname, idx in param_names.items():
+        consumers = [i for i in comp.instrs
+                     if i.opcode != "parameter"
+                     and re.search(r"%" + re.escape(pname) + r"\b", i.line)]
+        full = shape_bytes(comp.shapes.get(pname, ""))
+        if consumers and all(c.opcode in _SLICE_LIKE for c in consumers):
+            charges[idx] = sum(shape_bytes(c.shape) for c in consumers)
+        else:
+            charges[idx] = full
+    return charges
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_count: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+
+
+def analyze(text: str) -> HLOCost:
+    comps, entry = parse_module(text)
+    counts, body_like = execution_counts(comps, entry)
+    cost = HLOCost()
+    fusion_charges: dict[str, dict[int, float]] = {}
+    for cname, mult in counts.items():
+        comp = comps.get(cname)
+        if comp is None or mult == 0:
+            continue
+        at_boundary = cname in body_like
+        for i in comp.instrs:
+            op = i.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_KINDS:
+                b = shape_bytes(i.shape)
+                if op.endswith("-start"):      # tuple repeats in/out buffers
+                    b //= 2
+                cost.coll_bytes[base] += mult * b
+                cost.coll_count[base] += mult
+                cost.bytes_accessed += mult * b
+                continue
+            if op.endswith("-done"):
+                continue
+            # ---- FLOPs --------------------------------------------------
+            if op == "dot":
+                cost.flops += mult * _dot_flops(i, comp.shapes)
+            elif op == "convolution":
+                cost.flops += mult * _conv_flops(i)
+            elif op not in _MOVEMENT and op not in _SKIP_BYTES \
+                    and op != "fusion":
+                out = shape_numel(i.shape)
+                cost.flops += mult * out
+                if op in _TRANSCENDENTAL:
+                    cost.transcendentals += mult * out
+            # ---- bytes (fusion-boundary traffic) ------------------------
+            if not at_boundary or op in _SKIP_BYTES:
+                continue
+            out_bytes = shape_bytes(i.shape)
+            if op in _SLICE_LIKE:
+                cost.bytes_accessed += mult * 2 * out_bytes
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                ops_ = _instr_operands(i)
+                upd = (shape_bytes(comp.shapes.get(ops_[1], ""))
+                       if len(ops_) > 1 else out_bytes)
+                cost.bytes_accessed += mult * 2 * max(upd, 1)
+                continue
+            if op == "fusion":
+                callee = _CALLS_RE.search(i.line)
+                charges = None
+                if callee and callee.group(1) in comps:
+                    cal = callee.group(1)
+                    if cal not in fusion_charges:
+                        fusion_charges[cal] = _fusion_param_charges(
+                            comps[cal])
+                    charges = fusion_charges[cal]
+                operand_bytes = 0.0
+                for pos, oname in enumerate(_instr_operands(i)):
+                    sh = comp.shapes.get(oname)
+                    full = shape_bytes(sh) if sh else 0
+                    if charges is not None and pos in charges:
+                        operand_bytes += min(charges[pos], full) \
+                            if full else charges[pos]
+                    else:
+                        operand_bytes += full
+                cost.bytes_accessed += mult * (operand_bytes + out_bytes)
+                continue
+            operand_bytes = 0
+            for oname in _instr_operands(i):
+                sh = comp.shapes.get(oname)
+                if sh:
+                    operand_bytes += shape_bytes(sh)
+            cost.bytes_accessed += mult * (operand_bytes + out_bytes)
+    return cost

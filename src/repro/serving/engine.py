@@ -1,0 +1,188 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over the model zoo's (prefill, decode) steps: a fixed
+pool of B cache slots; arriving requests prefill into free slots (padded
+to a bucket length to bound recompiles); every engine tick decodes ONE
+token for ALL slots in a single batched call — the cache layer keeps
+per-row ring positions (models/attention.py), so slots at different
+phases coexist in one pool and finished requests free their slot
+immediately (no head-of-line blocking).  vLLM's loop, reduced to the
+positional ring cache.
+
+Single-host execution; the pod-scale serve path (launch/serve.py) lowers
+the same step functions with sharded caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32 token ids
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1 = never stops early
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+    ticks: int                         # decode ticks consumed
+
+
+class ServeEngine:
+    """``submit()`` requests, ``run()`` until drained."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, prefill_buckets=(32, 64, 128, 256),
+                 sampler: Optional[Callable] = None):
+        assert cfg.frontend == "none", "engine serves text archs"
+        assert cfg.ssm is None and cfg.xlstm is None, \
+            "right-padded prefill is exact for KV caches only; SSM state " \
+            "needs unpadded scans (use per-bucket prefill instead)"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.buckets = tuple(b for b in sorted(prefill_buckets)
+                             if b <= max_len)
+        self.sampler = sampler or (lambda logits, key: jnp.argmax(logits, -1))
+
+        self.caches = model_lib.init_caches(cfg, slots, max_len,
+                                            jnp.dtype(cfg.dtype))
+        self.pos = np.zeros(slots, np.int32)        # next position per slot
+        self.active: list[Optional[Request]] = [None] * slots
+        self.emitted: dict[int, list[int]] = {}
+        self.started: dict[int, int] = {}
+        self.queue: list[Request] = []
+        self.done: list[Completion] = []
+        self.ticks = 0
+
+        # full logits (not last_only): with right-padding the last REAL
+        # position differs per request
+        self._prefill = jax.jit(
+            lambda p, toks, caches: model_lib.forward(
+                p, {"tokens": toks}, cfg, caches=caches)[:2])
+        self._decode = jax.jit(
+            lambda p, toks, caches, offs: model_lib.serve_decode(
+                p, {"tokens": toks}, caches, offs, cfg))
+
+    # -- public api ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) <= max(self.buckets), "prompt too long"
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000) -> list[Completion]:
+        while (self.queue or any(a is not None for a in self.active)) \
+                and self.ticks < max_ticks:
+            self._admit()
+            self._tick()
+        return self.done
+
+    @property
+    def utilization(self) -> float:
+        return sum(a is not None for a in self.active) / self.slots
+
+    # -- internals -----------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            n = len(req.prompt)
+            b = self._bucket(n)
+            padded = np.zeros(b, np.int32)
+            padded[:n] = req.prompt                    # RIGHT-pad: prompt
+            # tokens never attend pads (causal), pads are invalidated below
+            single = model_lib.init_caches(self.cfg, 1, self.max_len,
+                                           jnp.dtype(self.cfg.dtype))
+            logits, single = self._prefill(self.params,
+                                           jnp.asarray(padded)[None], single)
+            single = _invalidate_pads(single, n, b)
+            self.caches = _write_slot(self.caches, single, s)
+            tok = int(np.asarray(self.sampler(
+                logits[:, n - 1], jax.random.PRNGKey(req.uid)))[0])
+            self.active[s] = req
+            self.pos[s] = n
+            self.emitted[req.uid] = [tok]
+            self.started[req.uid] = self.ticks
+
+    def _tick(self) -> None:
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return
+        self.ticks += 1
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.emitted[self.active[s].uid][-1]
+        # ONE batched decode at per-slot offsets; idle slots decode a
+        # dummy token into their own (soon-overwritten) rows
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos, jnp.int32))
+        arr = np.asarray(self.sampler(logits[:, 0],
+                                      jax.random.PRNGKey(self.ticks)))
+        for s in live:
+            req = self.active[s]
+            tok = int(arr[s])
+            self.emitted[req.uid].append(tok)
+            self.pos[s] += 1
+            n = len(self.emitted[req.uid])
+            if n >= req.max_new_tokens or tok == req.eos_id:
+                self.done.append(Completion(
+                    uid=req.uid, tokens=self.emitted.pop(req.uid),
+                    prompt_len=len(req.prompt),
+                    ticks=self.ticks - self.started.pop(req.uid)))
+                self.active[s] = None
+        for s in range(self.slots):
+            if self.active[s] is None:
+                self.pos[s] = 0         # park idle slots at position 0
+
+
+def _invalidate_pads(single, n: int, b: int):
+    """Mark the ring slots holding right-pad tokens as empty (pos = -1) so
+    the per-row valid mask hides them from every later decode."""
+    def fix(path, leaf):
+        name = ""
+        for part in reversed(path):
+            if hasattr(part, "key"):
+                name = str(part.key)
+                break
+        if name == "pos" and leaf.ndim >= 2:
+            size = leaf.shape[-1]
+            sl = jnp.arange(size)
+            mask = jnp.logical_and(sl >= n % max(size, 1), sl < b) \
+                if size < b else jnp.logical_and(sl >= n, sl < b)
+            return jnp.where(mask, -1, leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, single)
+
+
+def _write_slot(pool, single, s: int):
+    """Splice a 1-row cache pytree into row ``s`` of the pool.  Cache
+    leaves carry (n_groups, count) stack dims, then the batch row."""
+    def w(p, o):
+        if p.ndim >= 3 and o.ndim == p.ndim and o.shape[2] == 1 \
+                and p.shape[:2] == o.shape[:2]:
+            return p.at[:, :, s:s + 1].set(o.astype(p.dtype))
+        return p
+    return jax.tree.map(w, pool, single)

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see the
+default single CPU device.  SPMD tests spawn subprocesses with their own
+device counts (test_dist_spmd.py)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.calibrated_update import ref as cu_ref
+from repro.kernels.calibrated_update.kernel import (calibrated_update_2d,
+                                                    calibrated_update_prox_2d)
+from repro.kernels.calibrated_update.ops import (calibrated_update_tree,
+                                                 flatten_to_2d,
+                                                 unflatten_from_2d)
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# calibrated update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols", [(8, 128), (100, 128), (512, 256),
+                                       (1000, 384), (3, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_calibrated_update_2d(rows, cols, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    x, g, c = (_rand(k, (rows, cols), dtype) for k in keys)
+    got = calibrated_update_2d(x, g, c, 0.03, 0.7, interpret=True)
+    want = cu_ref.calibrated_update(x, g, c, 0.03, 0.7)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+    assert got.dtype == x.dtype
+
+
+def test_calibrated_update_prox():
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    x, g, c, x0 = (_rand(k, (64, 128), jnp.float32) for k in keys)
+    got = calibrated_update_prox_2d(x, g, c, x0, 0.05, 0.5, 0.1,
+                                    interpret=True)
+    want = cu_ref.calibrated_update_prox(x, g, c, x0, 0.05, 0.5, 0.1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_calibrated_update_traced_scalars_no_recompile():
+    """η/λ are SMEM operands — changing them must not retrace."""
+    x = _rand(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    f = jax.jit(lambda e, l: calibrated_update_2d(x, x, x, e, l,
+                                                  interpret=True))
+    a = f(jnp.float32(0.1), jnp.float32(0.0))
+    b = f(jnp.float32(0.2), jnp.float32(1.0))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_flatten_roundtrip_ragged_tree():
+    tree = {
+        "a": _rand(jax.random.PRNGKey(0), (7, 13), jnp.float32),
+        "b": {"c": _rand(jax.random.PRNGKey(1), (5,), jnp.bfloat16),
+              "d": _rand(jax.random.PRNGKey(2), (2, 3, 4), jnp.float32)},
+    }
+    mat, metas, treedef, n = flatten_to_2d(tree)
+    assert mat.shape[1] == 128
+    back = unflatten_from_2d(mat, metas, treedef, n)
+    for k1, k2 in [("a", None), ("b", "c"), ("b", "d")]:
+        x = tree[k1] if k2 is None else tree[k1][k2]
+        y = back[k1] if k2 is None else back[k1][k2]
+        assert x.dtype == y.dtype
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), rtol=1e-2)
+
+
+def test_calibrated_update_tree_matches_ref():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    mk = lambda k: {"w": _rand(k, (33, 17), jnp.float32),
+                    "b": _rand(k, (9,), jnp.float32)}
+    x, g, c = mk(keys[0]), mk(keys[1]), mk(keys[2])
+    got = calibrated_update_tree(x, g, c, 0.01, 0.3, interpret=True)
+    want = calibrated_update_tree(x, g, c, 0.01, 0.3, use_pallas=False)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, S, H, Hkv, D, window
+    (2, 128, 4, 4, 64, 0),        # MHA
+    (1, 256, 8, 2, 64, 0),        # GQA 4:1
+    (2, 128, 4, 1, 128, 0),       # MQA
+    (1, 256, 4, 4, 64, 64),       # sliding window
+    (1, 128, 2, 2, 80, 0),        # non-128 head dim (lane padding)
+    (1, 512, 2, 1, 64, 128),      # GQA + window
+]
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,window", CASES)
+def test_flash_attention_vs_ref(B, S, H, Hkv, D, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = _rand(ks[2], (B, S, Hkv, D), jnp.float32)
+    got = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    want = fa_ref.attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = _rand(ks[1], (1, 128, 4, 64), jnp.bfloat16)
+    v = _rand(ks[2], (1, 128, 4, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = fa_ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    assert got.dtype == jnp.bfloat16
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    a = flash_attention(q, k, v, block_q=64, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=256, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests on REDUCED variants (per instructions):
+2 layers, d_model ≤ 512, ≤ 4 experts — one forward/train step on CPU,
+asserting output shapes + no NaNs; plus decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.models import model as M
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "audio":
+        codes = jax.random.randint(key, (B, cfg.n_codebooks, S), 0, cfg.vocab)
+        return {"codes": codes, "labels": codes}
+    if cfg.frontend == "vision":
+        embeds = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        t = jnp.broadcast_to(jnp.arange(S), (B, S))
+        positions = jnp.stack([t, t % 4, t % 8], axis=1)
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        return {"embeds": embeds, "positions": positions, "labels": labels}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+def slice_step(batch, s):
+    """One-position slice of a prompt batch for incremental decode."""
+    out = {}
+    for k, v in batch.items():
+        if k == "labels":
+            continue
+        if k == "codes":
+            out[k] = v[:, :, s:s + 1]
+        elif k == "positions":
+            out[k] = v[:, :, s:s + 1]
+        else:
+            out[k] = v[:, s:s + 1]
+    return out
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced(ARCHS[name])
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name, params_cache):
+    cfg, params = params_cache(name)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits, _, aux = M.forward(params, batch, cfg)
+    if cfg.frontend == "audio":
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_no_nans(name, params_cache):
+    cfg, params = params_cache(name)
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(M.lm_loss)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward(name, params_cache):
+    """Prefill S₀ then decode token-by-token == full forward (cache
+    correctness across every block kind).
+
+    MoE archs use no-drop capacity here: finite-capacity token dropping is
+    context-length dependent (a 4-token prefill and an 8-token forward drop
+    different tokens), so exact equality only holds without drops."""
+    import dataclasses
+
+    cfg, params = params_cache(name)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    B, S0, S = 2, 8, 12
+    full = make_batch(cfg, B, S)
+    logits_full, _, _ = M.forward(params, full, cfg)
+
+    caches = M.init_caches(cfg, B, max_len=S, dtype=jnp.float32)
+    prompt = {k: v for k, v in full.items() if k != "labels"}
+    pre = jax.tree.map(
+        lambda v: v[:, :, :S0] if v.ndim == 3 and v.shape[1] in (3, cfg.n_codebooks or -1) and v.shape[-1] == S else v[:, :S0],
+        prompt)
+    # build prefill slice per modality explicitly
+    if cfg.frontend == "audio":
+        pre = {"codes": prompt["codes"][:, :, :S0]}
+    elif cfg.frontend == "vision":
+        pre = {"embeds": prompt["embeds"][:, :S0],
+               "positions": prompt["positions"][:, :, :S0]}
+    else:
+        pre = {"tokens": prompt["tokens"][:, :S0]}
+    logits_pre, caches = M.serve_decode(params, pre, caches, 0, cfg)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                               np.asarray(logits_full[:, S0 - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for s in range(S0, S):
+        step = slice_step(prompt, s)
+        logits_s, caches = M.serve_decode(params, step, caches, s, cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_s[:, 0]), np.asarray(logits_full[:, s]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{name}: decode mismatch at position {s}")
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_respects_limits(name):
+    cfg = reduced(ARCHS[name])
+    assert cfg.n_layers <= 2 or cfg.hybrid_attn_every
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.family == ARCHS[name].family
+
+
+def test_param_count_close_to_exact():
+    """Analytic param_count within 2% of the real init for every arch."""
+    for name in ARCH_NAMES:
+        cfg = reduced(ARCHS[name])
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        real = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - real) / real < 0.02, (name, est, real)

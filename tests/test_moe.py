@@ -1,0 +1,93 @@
+"""MoE dispatch correctness: the sort-based capacity dispatch must equal a
+dense (every-expert-on-every-token) reference when capacity is unlimited,
+and degrade only by dropping when capacity binds."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import init_moe, moe, route
+
+
+def _cfg(E=4, top_k=2, cap=None) -> ModelConfig:
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=16, vocab=64,
+        moe=MoEConfig(n_experts=E, top_k=top_k, d_ff=16,
+                      capacity_factor=cap if cap is not None else float(E),
+                      aux_loss_coef=0.0))
+
+
+def dense_moe_ref(params, x, cfg):
+    """Every token through every expert, combined by router weights."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    w, ids, _ = route(params["router"], xt, cfg.moe.top_k)
+    h = jnp.einsum("td,edf->etf", xt, params["w_in"])
+    g = jnp.einsum("td,edf->etf", xt, params["w_gate"])
+    out_all = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * h,
+                         params["w_out"])                      # (E,T,d)
+    y = jnp.zeros_like(xt)
+    for j in range(cfg.moe.top_k):
+        y = y + w[:, j, None] * jnp.take_along_axis(
+            out_all, ids[None, :, j, None], axis=0)[0]
+    return y.reshape(B, S, d)
+
+
+def test_moe_matches_dense_reference_no_drop():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    params = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    got, aux = moe(params, x, cfg)
+    want = dense_moe_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    assert float(aux) == 0.0                                   # coef 0
+
+
+def test_route_weights_normalized():
+    cfg = _cfg(E=8, top_k=3)
+    key = jax.random.PRNGKey(2)
+    router = jax.random.normal(key, (32, 8))
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 32))
+    w, ids, aux = route(router, x, 3)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-5)
+    assert int(ids.max()) < 8 and int(ids.min()) >= 0
+    # top-k ids distinct per token
+    for row in np.asarray(ids):
+        assert len(set(row.tolist())) == 3
+    assert float(aux) >= 1.0 - 1e-3    # switch aux loss lower bound is 1
+
+
+def test_capacity_drops_are_bounded():
+    """With tight capacity the output differs from dense only on dropped
+    tokens, and the shared expert still covers every token."""
+    cfg = _cfg(E=4, top_k=2, cap=0.5)
+    key = jax.random.PRNGKey(4)
+    params = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 32))
+    got, _ = moe(params, x, cfg)
+    assert np.all(np.isfinite(np.asarray(got)))
+    # dropped-token rows are exactly zero (no shared expert here)
+    dense = dense_moe_ref(params, x, cfg)
+    diff = np.abs(np.asarray(got - dense)).max(axis=-1)[0]
+    kept = diff < 1e-4
+    assert kept.sum() >= 4          # capacity 0.5 keeps ≥ E*C/k tokens
+
+
+def test_moe_gradients_flow_to_all_parts():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(6)
+    params = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 32))
+
+    def loss(p):
+        y, aux = moe(p, x, cfg)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(params)
+    for name in ("router", "w_in", "w_gate", "w_out"):
+        assert float(jnp.max(jnp.abs(g[name]))) > 0, name

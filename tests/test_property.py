@@ -1,0 +1,236 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.data.partition import (dirichlet_partition, gaussian_k_schedule,
+                                  iid_partition, shard_partition)
+from repro.kernels.calibrated_update import ref as cu_ref
+from repro.kernels.calibrated_update.kernel import calibrated_update_2d
+from repro.kernels.calibrated_update.ops import (flatten_to_2d,
+                                                 unflatten_from_2d)
+from repro.roofline import hlo
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# kernel ≡ oracle over random shapes / scalars
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 200), kcols=st.integers(1, 3),
+       eta=st.floats(0.0, 1.0), lam=st.floats(0.0, 2.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_calibrated_update_matches_oracle(rows, kcols, eta, lam, seed):
+    cols = 128 * kcols
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x, g, c = (jax.random.normal(k, (rows, cols), jnp.float32) for k in ks)
+    got = calibrated_update_2d(x, g, c, eta, lam, interpret=True)
+    want = cu_ref.calibrated_update(x, g, c, eta, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 20), st.integers(1, 20)), min_size=1,
+    max_size=5), seed=st.integers(0, 2**31 - 1))
+def test_flatten_roundtrip(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, s in enumerate(shapes)}
+    mat, metas, treedef, n = flatten_to_2d(tree)
+    assert n == sum(a * b for a, b in shapes)
+    back = unflatten_from_2d(mat, metas, treedef, n)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(back[k]))
+
+
+# ---------------------------------------------------------------------------
+# partition invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(50, 400), m=st.integers(2, 10),
+       alpha=st.floats(0.05, 5.0), seed=st.integers(0, 1000))
+def test_dirichlet_partition_is_a_partition(n, m, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, n)
+    parts = dirichlet_partition(labels, m, alpha, seed)
+    assert len(parts) == m
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) >= 0.95 * n     # near-total coverage
+    for p in parts:
+        assert len(p) > 0
+        assert np.all(p >= 0) and np.all(p < n)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(2, 8), cpc=st.integers(1, 5), seed=st.integers(0, 100))
+def test_shard_partition_class_limit(m, cpc, seed):
+    rng = np.random.default_rng(seed)
+    n, n_classes = 2000, 10
+    labels = rng.integers(0, n_classes, n)
+    parts = shard_partition(labels, m, cpc, seed)
+    assert len(parts) == m
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= cpc + 1       # equal volume
+    # a contiguous label-sorted shard of size s spans ≤ ceil(s/min_class)+1
+    # labels — cpc shards per client multiply that bound
+    n_shards = m * cpc
+    shard_size = -(-n // n_shards)
+    min_class = np.bincount(labels, minlength=n_classes).min()
+    span = -(-shard_size // max(min_class, 1)) + 1
+    for p in parts:
+        assert len(np.unique(labels[p])) <= min(n_classes, cpc * span)
+    # partition: disjoint and total
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(n))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 500), m=st.integers(1, 10))
+def test_iid_partition_exact(n, m):
+    parts = iid_partition(n, m)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(n))
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 16), mean=st.integers(1, 100),
+       var=st.floats(0, 1e4), t=st.integers(1, 20),
+       mode=st.sampled_from(["fixed", "random"]))
+def test_k_schedule_bounds(m, mean, var, t, mode):
+    ks = gaussian_k_schedule(m, mean, var, t, mode=mode, k_min=1)
+    assert ks.shape == (t, m)
+    assert ks.min() >= 1
+    if mode == "fixed":
+        assert np.all(ks == ks[0])
+
+
+# ---------------------------------------------------------------------------
+# theory invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(2, 6), d=st.integers(2, 8))
+def test_global_opt_is_stationary(seed, m, d):
+    rng = np.random.default_rng(seed)
+    As = rng.normal(size=(m, d, d)).astype(np.float64) + 2 * np.eye(d)
+    bs = rng.normal(size=(m, d)).astype(np.float64)
+    w = rng.dirichlet(np.ones(m))
+    x_star = theory.global_optimum(As, bs, w)
+    grad = sum(wi * A.T @ (A @ x_star - b) for wi, A, b in zip(w, As, bs))
+    np.testing.assert_allclose(grad, 0.0, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_fixed_point_is_invariant_under_round_map(seed):
+    """F(x̃_∞) = x̃_∞ under one exact-gradient FedAvg round."""
+    rng = np.random.default_rng(seed)
+    m, d, lr = 4, 5, 0.01
+    As = rng.normal(size=(m, d, d)) + 2 * np.eye(d)
+    bs = rng.normal(size=(m, d))
+    w = np.full(m, 0.25)
+    ks = rng.integers(1, 6, m)
+    fp = theory.fedavg_fixed_point(As, bs, w, ks, lr)
+    agg = np.zeros(d)
+    for wi, A, b, k in zip(w, As, bs, ks):
+        x = fp.copy()
+        for _ in range(int(k)):
+            x = x - lr * A.T @ (A @ x - b)
+        agg += wi * x
+    np.testing.assert_allclose(agg, fp, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost-model invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(trip=st.integers(1, 64), dim=st.sampled_from([128, 256, 512]))
+def test_hlo_trip_count_scales_collectives(trip, dim):
+    text = f"""HloModule test
+
+%body (p: (s32[], f32[{dim}])) -> (s32[], f32[{dim}]) {{
+  %p = (s32[], f32[{dim}]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[{dim}] get-tuple-element(%p), index=1
+  %ar = f32[{dim}] all-reduce(%x), replica_groups={{}}, to_apply=%add
+  ROOT %t = (s32[], f32[{dim}]) tuple(%i, %ar)
+}}
+
+%cond (p.1: (s32[], f32[{dim}])) -> pred[] {{
+  %p.1 = (s32[], f32[{dim}]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}}
+
+ENTRY %main (a: f32[{dim}]) -> f32[{dim}] {{
+  %a = f32[{dim}] parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[{dim}]) tuple(%zero, %a)
+  %w = (s32[], f32[{dim}]) while(%tup), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trip}"}}}}
+  ROOT %out = f32[{dim}] get-tuple-element(%w), index=1
+}}
+"""
+    cost = hlo.analyze(text)
+    assert cost.coll_bytes["all-reduce"] == trip * dim * 4
+    assert cost.coll_count["all-reduce"] == trip
+
+
+def test_hlo_dot_flops():
+    text = """HloModule t
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,32] parameter(1)
+  ROOT %d = f32[8,32] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    cost = hlo.analyze(text)
+    assert cost.flops == 2 * 8 * 32 * 16
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_round_engine_permutation_invariant(seed):
+    """Permuting (clients, weights, K_i, batches) together must not change
+    the aggregated parameters — no client is privileged by position."""
+    import jax
+    from repro.configs.base import FedConfig
+    from repro.core import rounds
+    from repro.core.fedopt import get_algorithm
+    from repro.models.simple import quad_loss
+
+    m, d, k_max = 4, 5, 3
+    rng = np.random.default_rng(seed)
+    As = rng.normal(size=(m, k_max, d, d)).astype(np.float32)
+    bs = rng.normal(size=(m, k_max, d)).astype(np.float32)
+    w = rng.dirichlet(np.ones(m)).astype(np.float32)
+    ks = rng.integers(1, k_max + 1, m).astype(np.int32)
+    perm = rng.permutation(m)
+
+    fed = FedConfig(algorithm="fedagrac", n_clients=m, lr=0.01,
+                    calibration_rate=0.5)
+    algo = get_algorithm("fedagrac", fed)
+    fn = jax.jit(rounds.make_round(quad_loss, algo, lr=0.01, k_max=k_max))
+
+    def run(order):
+        state = rounds.init_state({"x": jnp.zeros((d,), jnp.float32)},
+                                  m, algo)
+        batches = {"A": jnp.asarray(As[order]), "b": jnp.asarray(bs[order]),
+                   "c0": jnp.zeros((m, k_max))}
+        out, _ = fn(state, batches, jnp.asarray(ks[order]),
+                    jnp.asarray(w[order]))
+        return np.asarray(out["params"]["x"]), np.asarray(out["nu"]["x"])
+
+    p1, n1 = run(np.arange(m))
+    p2, n2 = run(perm)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(n1, n2, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,138 @@
+"""Sharding-rule unit tests (pure functions — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.launch import specs as specs_lib
+
+
+class _Key:
+    def __init__(self, key):
+        self.key = key
+
+
+def _path(*names):
+    return tuple(_Key(n) for n in names)
+
+
+def test_name_rules_attention():
+    # wq (d, H*hd): shard output dim
+    assert specs_lib.param_pspec(_path("attn", "wq"), (512, 1024), 16) \
+        == P(None, "model")
+    # wo (H*hd, d): shard contract dim
+    assert specs_lib.param_pspec(_path("attn", "wo"), (1024, 512), 16) \
+        == P("model", None)
+
+
+def test_moe_expert_axis_first():
+    # (E, d, f) with E divisible -> expert parallel
+    assert specs_lib.param_pspec(_path("moe", "w_in"), (32, 512, 128), 16) \
+        == P("model", None, None)
+    assert specs_lib.param_pspec(_path("moe", "w_out"), (32, 128, 512), 16) \
+        == P("model", None, None)
+    # E=4 not divisible by 16 -> falls through to mlp-style rule
+    ps = specs_lib.param_pspec(_path("moe", "w_in"), (4, 512, 128), 16)
+    assert ps == P(None, None, "model") or ps == P(None, "model", None)
+
+
+def test_embed_vocab_sharding():
+    assert specs_lib.param_pspec(_path("embed"), (128256, 512), 16) \
+        == P("model", None)
+    assert specs_lib.param_pspec(_path("head"), (512, 128256), 16) \
+        == P(None, "model")
+    # audio: stacked codebook embeddings (K, vocab, d)
+    assert specs_lib.param_pspec(_path("embed"), (4, 2048, 512), 16) \
+        == P(None, "model", None)
+
+
+def test_segments_leading_stack_dims_never_sharded():
+    # (n_groups, count, d, f) under "segments"
+    ps = specs_lib.param_pspec(
+        _path("segments", "0", "mlp", "w_in"), (32, 1, 512, 2048), 16)
+    assert ps == P(None, None, None, "model")
+
+
+def test_indivisible_replicates():
+    assert specs_lib.param_pspec(_path("x", "norm"), (511,), 16) == P(None)
+    assert specs_lib.param_pspec(_path("x", "scale"), (7,), 16) == P(None)
+
+
+def test_generic_fallback_largest_dim():
+    ps = specs_lib.param_pspec(_path("seg", "conv_w"), (4, 4096), 16)
+    assert ps == P(None, "model")
+
+
+def test_tree_pspecs_client_axes():
+    tree = {"segments": [{"mlp": {"w_in": jnp.zeros((2, 1, 64, 256))}}],
+            "embed": jnp.zeros((1024, 64))}
+    # client-stacked (nu_i): leading M dim on data axes
+    stacked = jax.tree.map(lambda a: jnp.zeros((8,) + a.shape), tree)
+    ps = specs_lib.tree_pspecs(stacked, 16, client_axes=("data",))
+    assert ps["embed"][0] == "data"
+    assert ps["embed"][1] == "model"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_arch_pspecs_valid(arch):
+    """Every full-size param leaf gets a spec whose sharded dims divide."""
+    cfg = specs_lib.bf16_config(ARCHS[arch])
+    params = specs_lib.abstract_params(cfg)
+    pspecs = specs_lib.tree_pspecs(params, 16)
+
+    def check(path, leaf, ps):
+        for dim, ax in enumerate(ps):
+            if ax is None:
+                continue
+            assert leaf.shape[dim] % 16 == 0, (path, leaf.shape, ps)
+
+    jax.tree_util.tree_map_with_path(
+        check, params, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_big_matrices_are_sharded():
+    """No ≥16M-element full-size tensor may be fully replicated."""
+    for arch in ("llama3-8b", "qwen1.5-32b", "deepseek-v2-lite-16b"):
+        cfg = specs_lib.bf16_config(ARCHS[arch])
+        params = specs_lib.abstract_params(cfg)
+        pspecs = specs_lib.tree_pspecs(params, 16)
+
+        def check(path, leaf, ps):
+            n = int(np.prod(leaf.shape))
+            if n >= 16_000_000:
+                assert any(ax is not None for ax in ps), (arch, path,
+                                                          leaf.shape)
+
+        jax.tree_util.tree_map_with_path(
+            check, params, pspecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_cache_pspec_decode_batch_and_heads():
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    # k cache (n_groups, count, B, S, Hkv, hd): B on data, Hkv on model
+    ps = specs_lib.cache_pspec(_path("0", "k"), (32, 1, 128, 32768, 32, 128),
+                               M(), kind="decode")
+    assert ps == P(None, None, "data", None, "model", None)
+    # Hkv=8 < 16: falls back to the sequence dim for model
+    ps = specs_lib.cache_pspec(_path("0", "k"), (32, 1, 128, 32768, 8, 128),
+                               M(), kind="decode")
+    assert ps == P(None, None, "data", "model", None, None)
+
+
+def test_cache_pspec_long_shards_sequence_on_data():
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    ps = specs_lib.cache_pspec(_path("0", "k"), (8, 1, 1, 524288, 32, 128),
+                               M(), kind="long")
+    assert ps[3] == "data"
+    # pos/idx always replicated
+    assert specs_lib.cache_pspec(_path("0", "pos"), (8, 1, 524288), M(),
+                                 kind="long") == P(None, None, None)

@@ -1,0 +1,60 @@
+"""SSD (Mamba2) Pallas kernel vs the chunked-scan oracle (which
+tests/test_ssm_equivalence.py proves equal to the naive recurrence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.models.mamba2 import ssd_chunked
+
+CASES = [
+    # b, l, h, p, g, n, chunk
+    (2, 64, 4, 16, 2, 8, 16),      # grouped B/C (zamba2-style)
+    (1, 128, 2, 32, 1, 16, 32),    # single group
+    (2, 256, 4, 64, 4, 64, 128),   # production-ish dims (P=64, N=64, L=128)
+    (1, 64, 2, 16, 2, 8, 64),      # single chunk (no inter-chunk term)
+]
+
+
+def _inputs(b, l, h, p, g, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, l, g, n))
+    C = jax.random.normal(ks[4], (b, l, g, n))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", CASES)
+def test_ssd_kernel_vs_oracle(b, l, h, p, g, n, chunk):
+    x, dt, A, B, C = _inputs(b, l, h, p, g, n)
+    y_k, s_k = ssd_scan(x, dt, A, B, C, chunk, interpret=True)
+    y_r, s_r = ssd_chunked(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_state_chains_across_calls():
+    """Final state of a 2-chunk scan == state after scanning twice the
+    half-length sequences would require carrying state — verify the single
+    call's state equals the naive recurrence end state (already covered)
+    AND that chunk size does not change results."""
+    x, dt, A, B, C = _inputs(1, 128, 2, 16, 1, 8)
+    y16, s16 = ssd_scan(x, dt, A, B, C, 16, interpret=True)
+    y64, s64 = ssd_scan(x, dt, A, B, C, 64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s64),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_use_pallas_false_is_oracle():
+    x, dt, A, B, C = _inputs(1, 64, 2, 16, 1, 8)
+    y1, s1 = ssd_scan(x, dt, A, B, C, 16, use_pallas=False)
+    y2, s2 = ssd_chunked(x, dt, A, B, C, 16)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))

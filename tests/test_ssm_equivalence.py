@@ -1,0 +1,95 @@
+"""Deep equivalence tests for the recurrent blocks:
+
+* Mamba2 chunked SSD scan == naive per-step recurrence (the chunked form
+  is an exact algebraic refactoring, not an approximation);
+* mLSTM stabilized parallel form == per-step recurrence (the stabilizer
+  m_t = F_t + cummax(log ĩ_s − F_s) equals the recurrent running max).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.mamba2 import ssd_chunked
+from repro.models.xlstm import _mlstm_parallel
+
+
+def naive_ssd(x, dt, A, B, C):
+    """Literal SSM recurrence: S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_tᵀ."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xb = (x * dt[..., None]).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, None, :])                    # (b,l,h)
+
+    def step(S, t):
+        S = (decay[:, t][..., None, None] * S
+             + jnp.einsum("bhp,bhn->bhpn", xb[:, t], Bh[:, t]))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_last, ys = jax.lax.scan(step, S0, jnp.arange(l))
+    return ys.transpose(1, 0, 2, 3), S_last
+
+
+def test_ssd_chunked_equals_recurrence():
+    key = jax.random.PRNGKey(0)
+    b, l, h, p, g, n = 2, 64, 4, 16, 2, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, l, g, n))
+    C = jax.random.normal(ks[4], (b, l, g, n))
+    for chunk in (8, 16, 64):
+        y_chunk, S_chunk = ssd_chunked(x, dt, A, B, C, chunk)
+        y_naive, S_naive = naive_ssd(x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"chunk={chunk}")
+        np.testing.assert_allclose(np.asarray(S_chunk), np.asarray(S_naive),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def naive_mlstm(q, k, v, log_i, log_f):
+    """Literal stabilized mLSTM recurrence."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    C = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n = jnp.zeros((B, H, hd), jnp.float32)
+    m = jnp.full((B, H), -jnp.inf, jnp.float32)
+    outs = []
+    for t in range(S):
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        k0 = k[:, t].astype(jnp.float32) * scale
+        v0 = v[:, t].astype(jnp.float32)
+        q0 = q[:, t].astype(jnp.float32)
+        C = (f_s[..., None, None] * C
+             + i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", k0, v0))
+        n = f_s[..., None] * n + i_s[..., None] * k0
+        num = jnp.einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q0)),
+                          jnp.exp(-m_new))
+        outs.append(num / den[..., None])
+        m = m_new
+    return jnp.stack(outs, axis=1)
+
+
+def test_mlstm_parallel_equals_recurrence():
+    key = jax.random.PRNGKey(1)
+    B, S, H, hd = 2, 48, 2, 16
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    log_i = jax.random.normal(ks[3], (B, S, H))
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    got = _mlstm_parallel(q, k, v, log_i, log_f, block_q=16)
+    want = naive_mlstm(q, k, v, log_i, log_f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
