@@ -32,7 +32,7 @@ def run(quick: bool = False) -> list[tuple]:
                                   k_schedule=ks)
         # rebuild the round with quantized transmission
         algo = get_algorithm("fedagrac", fed)
-        sim._round_cache[fed.calibration_rate] = jax.jit(rounds.make_round(
+        sim._round = jax.jit(rounds.make_round(
             task.loss_fn, algo, lr=fed.lr, k_max=sim.k_max,
             quantize_transmit=quant))
         hist = sim.run(t)

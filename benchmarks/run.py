@@ -15,7 +15,7 @@ from benchmarks import (ablation_int8_nu, fairness, fig2_lambda,
                         fig3_orientation, fig4_grid, fig5_curves,
                         kernel_bench, roofline_table, server_opt,
                         table1_deterioration, table2_utilization,
-                        table6_rounds, thm1_quadratic)
+                        table6_rounds, table_async, thm1_quadratic)
 
 MODULES = {
     "thm1": thm1_quadratic,
@@ -25,6 +25,7 @@ MODULES = {
     "fig3": fig3_orientation,
     "fig4": fig4_grid,
     "table6": table6_rounds,
+    "table_async": table_async,
     "fig5": fig5_curves,
     "kernel": kernel_bench,
     "int8_nu": ablation_int8_nu,

@@ -226,6 +226,18 @@ class FedConfig:
     server_opt: Literal["sgd", "momentum", "adam"] = "sgd"
     server_lr: float = 1.0                 # FedOpt server step size
     seed: int = 0
+    # -- buffered semi-asynchronous execution (fed/async_engine.py) ----------
+    # buffer_size M' ≤ M: the server updates once M' client reports arrive
+    # (Nguyen et al. FedBuff).  0 ⇒ fully synchronous rounds; 1 ⇒ FedAsync;
+    # M ⇒ reduces to the synchronous round (DESIGN.md §5).
+    buffer_size: int = 0
+    staleness: Literal["constant", "hinge", "poly"] = "constant"
+    staleness_a: float = 0.5               # discount decay rate (hinge/poly)
+    staleness_b: int = 4                   # hinge: free staleness budget
+    # client wall-clock model (fed/clock.py): per-client step rates
+    speed_dist: Literal["fixed", "uniform", "lognormal", "bimodal"] = "lognormal"
+    speed_sigma: float = 0.5               # lognormal σ of client step rates
+    comm_latency: float = 0.0              # fixed per-report overhead (s)
 
 
 def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 128,

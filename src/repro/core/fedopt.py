@@ -1,6 +1,8 @@
 """Federated optimizer zoo.
 
-Every algorithm is a parameterization of one round engine (rounds.py):
+Every algorithm names a composition of the four round-engine stages
+(core/stages.py — client update, aggregation, orientation, server
+optimizer; DESIGN.md §2):
 
     local step   : x ← x − η (g + λ·(ν − ν⁽ⁱ⁾) [+ μ_prox (x − x̃_t)])
     aggregation  : weighted average (or FedNova normalized average)
@@ -45,6 +47,17 @@ class Algorithm:
     @property
     def uses_nu(self) -> bool:
         return self.strategy != "none"
+
+    # -- stage composition (core/stages.py registries, DESIGN.md §2) --------
+    @property
+    def aggregator(self) -> str:
+        """Key into stages.AGGREGATORS / stages.BUFFERED_AGGREGATORS."""
+        return "fednova" if self.normalize else "mean"
+
+    @property
+    def selector(self) -> str:
+        """Key into stages.SELECTORS (orientation transmit choice)."""
+        return self.strategy
 
 
 def get_algorithm(name: str, fed: FedConfig) -> Algorithm:

@@ -1,0 +1,37 @@
+"""Small pytree helpers shared by the round-engine stages (DESIGN.md §2).
+
+These were previously private to ``core/rounds.py`` (``_expand`` and
+``_expand_b`` were byte-identical duplicates — now one ``expand``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_zeros(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_stack_zeros(tree: PyTree, m: int) -> PyTree:
+    """Zero tree with a new leading client axis of size ``m``."""
+    return jax.tree.map(lambda a: jnp.zeros((m,) + a.shape, a.dtype), tree)
+
+
+def expand(v: jax.Array, like: jax.Array) -> jax.Array:
+    """(M,) -> (M, 1, 1, ...) broadcastable against ``like`` (M, ...)."""
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def tree_wsum(weights: jax.Array, tree: PyTree) -> PyTree:
+    """Σ_m weights[m] · tree[m] per leaf, accumulated in f32, returned in
+    the leaf dtype: f32 weights would otherwise promote the whole round
+    state to f32 — doubling every activation/grad collective and breaking
+    state-dtype stability across rounds (EXPERIMENTS.md §Perf #3)."""
+    return jax.tree.map(
+        lambda a: jnp.einsum("m,m...->...", weights,
+                             a.astype(jnp.float32)).astype(a.dtype), tree)

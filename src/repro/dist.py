@@ -1,0 +1,105 @@
+"""Logical-axis sharding constraints (the model-side half of the mesh story).
+
+``launch/mesh.py`` decides *which physical mesh axes* implement each logical
+axis per step kind (``mesh_rules``); this module holds that decision in
+process-global state so model code can annotate intermediates with logical
+names only:
+
+    constrain(h, "dp", None, "mp")     # (batch, seq, hidden)
+
+Logical names: ``dp`` (batch/data parallel), ``mp`` (tensor/model parallel),
+``sp`` (sequence parallel — long-decode KV caches).  Outside any mesh (unit
+tests, CPU simulation) every call is a no-op, so the model zoo runs unchanged
+on a single device.
+
+Two deliberate behaviours (relied on by the model code):
+
+* an axis whose physical size does not evenly divide the dimension is
+  *dropped* (stays replicated) — e.g. KV heads on meshes wider than Hkv
+  (attention.py), vocab on odd vocab sizes;
+* rules may map a logical name to ``()`` (train mode maps ``dp`` to nothing
+  because vmap already consumed the client axis) — also replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# process-global current mesh + logical→physical rules; set by the launch
+# layer (build_train_round / build_prefill / build_decode) before tracing.
+_MESH = None
+_RULES: dict[str, tuple[str, ...]] = {}
+
+
+def set_mesh_rules(mesh, rules: dict[str, Sequence[str]]) -> None:
+    """Install ``mesh`` and logical→physical ``rules`` for subsequent
+    ``constrain`` calls (idempotent; last call wins)."""
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = {k: tuple(v) for k, v in rules.items()}
+
+
+def unset_mesh() -> None:
+    """Clear the mesh: every later ``constrain`` is a no-op (single-device)."""
+    global _MESH, _RULES
+    _MESH = None
+    _RULES = {}
+
+
+def current_mesh():
+    return _MESH
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient jax mesh.
+
+    ``jax.set_mesh`` first shipped after the toolchain baked into this
+    container (0.4.37); there the ``Mesh`` object itself is the context
+    manager with the same scoping semantics."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(name: str) -> int:
+    """Total device count implementing logical axis ``name`` (1 if unmapped
+    or no mesh is installed)."""
+    if _MESH is None:
+        return 1
+    out = 1
+    for ax in _RULES.get(name, ()):
+        out *= _MESH.shape[ax]
+    return out
+
+
+def _physical(name: Optional[str], dim: int):
+    """Physical axes for one tensor dimension, or None to replicate."""
+    if name is None or _MESH is None:
+        return None
+    axes = _RULES.get(name, ())
+    size = 1
+    for ax in axes:
+        size *= _MESH.shape[ax]
+    if not axes or size <= 1:
+        return None
+    if dim % size != 0:              # non-dividing axis: keep replicated
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names, one per dim.
+
+    No-op when no mesh is installed.  Under ``vmap(spmd_axis_name=...)``
+    (the round engine's client axis) ``x`` is the per-client view and
+    ``names`` describe its per-client dims only.
+    """
+    if _MESH is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(names)} axis names for rank-{x.ndim} value")
+    spec = P(*(_physical(n, d) for n, d in zip(names, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,313 @@
+"""Buffered semi-asynchronous federated execution (DESIGN.md §5).
+
+The synchronous engine (fed/simulation.py) advances in lock-step rounds —
+the straggler defines the round clock.  This engine drops the barrier:
+clients train continuously, each report arrives after its simulated duration
+(fed/clock.py), and the server updates once a **buffer** of M' ≤ M reports
+has accumulated (Nguyen et al., FedBuff).  Arrived updates may be **stale**
+— computed against a model version τ updates old — and are discounted by a
+staleness weight s(τ) (Xie et al., FedAsync):
+
+    constant : s(τ) = 1
+    hinge    : s(τ) = 1                 τ ≤ b,   else 1 / (1 + a (τ − b))
+    poly     : s(τ) = (1 + τ)^(−a)
+
+The buffered server update on arrivals B with global weights ω and
+discounts s_i = s(τ_i), w̃_i = ω_i s_i:
+
+    x       ← serveropt( x,  Σ_{i∈B} w̃_i (x⁽ⁱ⁾ − x_{v_i}) )       (pseudo-deltas)
+    ν       ← (1 − Σ_{i∈B} w̃_i) ν  +  Σ_{i∈B} w̃_i transmitᵢ      (mass-mixed)
+    ν⁽ⁱ⁾    ← ν̄⁽ⁱ⁾   for i ∈ B only                              (row scatter)
+
+All three reuse the synchronous stages verbatim (core/stages.py): the
+client-update scan runs with *per-client anchors* (the stale model version
+each client was dispatched with), aggregation uses the pseudo-delta
+variants, and orientation recovers ν̄⁽ⁱ⁾ against the same stale anchor.
+With buffer = M, identical client speeds and zero staleness, every quantity
+above reduces to the synchronous round — FedaGrac-vs-FedAsync-vs-FedBuff is
+one config switch (``FedConfig.buffer_size`` / ``staleness``).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import rounds, stages
+from repro.core.fedopt import get_algorithm
+from repro.core.tree_util import tree_wsum
+from repro.data.partition import gaussian_k_schedule
+from repro.fed.clock import ClientClock, make_clock
+from repro.fed.simulation import History
+
+PyTree = Any
+
+
+def staleness_weight(tau, mode: str = "constant", a: float = 0.5,
+                     b: int = 4) -> np.ndarray:
+    """Staleness discount s(τ) ≥ 0, s(0) = 1 (FedAsync §5 shapes)."""
+    tau = np.asarray(tau, np.float64)
+    if mode == "constant":
+        return np.ones_like(tau)
+    if mode == "poly":
+        return (1.0 + tau) ** (-a)
+    if mode == "hinge":
+        return 1.0 / (1.0 + a * np.maximum(tau - b, 0.0))
+    raise ValueError(f"unknown staleness mode {mode!r}")
+
+
+class BufferedAsyncSimulation:
+    """``run(T)`` executes T buffered server updates of ``fed.algorithm``.
+
+    Mirrors ``FederatedSimulation``'s constructor so benchmarks can switch
+    engines on ``fed.buffer_size`` alone.  ``clock`` defaults to the
+    ``fed.speed_dist`` wall-clock model; ``k_schedule`` rows index per-client
+    *dispatches* (client *i*'s d-th task uses row d), so with buffer = M and
+    identical speeds the data stream matches the synchronous engine's.
+    """
+
+    def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                 params: PyTree, fed: FedConfig, batcher,
+                 eval_fn: Optional[Callable[[PyTree], float]] = None,
+                 k_schedule: Optional[np.ndarray] = None,
+                 lam_schedule: Optional[Callable[[int], float]] = None,
+                 clock: Optional[ClientClock] = None,
+                 t_max: int = 10_000):
+        m = fed.n_clients
+        self.fed = fed
+        self.algo = get_algorithm(fed.algorithm, fed)
+        self.batcher = batcher
+        self.eval_fn = eval_fn
+        self.lam_schedule = lam_schedule
+        self.buffer = fed.buffer_size if fed.buffer_size > 0 else m
+        if not 1 <= self.buffer <= m:
+            raise ValueError(f"buffer_size {self.buffer} not in [1, {m}]")
+        if k_schedule is None:
+            k_schedule = gaussian_k_schedule(
+                m, fed.k_mean, fed.k_var, t_max,
+                mode=fed.k_mode, seed=fed.seed)
+        self.k_schedule = k_schedule
+        self.k_max = int(k_schedule.max())
+        self.clock = clock if clock is not None else make_clock(
+            m, dist=fed.speed_dist, sigma=fed.speed_sigma,
+            latency=fed.comm_latency, seed=fed.seed)
+        self.weights = (np.asarray(batcher.weights)
+                        if fed.weights == "data"
+                        else np.full((m,), 1.0 / m, np.float32))
+        self.state = rounds.init_state(params, m, self.algo)
+        self.version = 0
+        # model-version history for stale anchors: version -> (params, nu);
+        # pruned to the oldest version still referenced by an in-flight task
+        self._hist = {0: (self.state["params"], self.state.get("nu"))}
+        self._batch_cache: dict[int, PyTree] = {}
+        self._step = jax.jit(self._make_step(loss_fn))
+
+    # -- the jitted buffered update (one trace: buffer size is static) ------
+
+    def _make_step(self, loss_fn):
+        algo, lr, buffer = self.algo, self.fed.lr, self.buffer
+        client_update = stages.make_client_update(
+            loss_fn, algo, lr=lr, k_max=self.k_max, per_client_anchor=True)
+        aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
+
+        def step(state, anchor_i, nu_anchor, batches, k_steps, sw, idx, lam):
+            params = state["params"]
+            kf = k_steps.astype(jnp.float32)
+            # Σ w̃ — usually in (0, 1], but a high-weight fast client
+            # reporting twice into one buffer can push it past 1
+            mass = jnp.sum(sw)
+            kbar = jnp.dot(sw, kf) / mass            # buffer-local K̄
+
+            if algo.uses_nu:
+                # correction each client ran with: c⁽ⁱ⁾ = ν_{v_i} − ν⁽ⁱ⁾
+                # (ν⁽ⁱ⁾ rows change only when client i itself reports, so the
+                # current row still holds the dispatch-time value)
+                c_b = jax.tree.map(lambda na, nui: na - nui[idx],
+                                   nu_anchor, state["nu_i"])
+            else:
+                c_b = stages.zero_corrections(params, buffer)
+
+            x_b, g0_b, acc_b, loss0 = client_update(anchor_i, c_b, batches,
+                                                    k_steps, lam)
+
+            agg = aggregate(params, anchor_i, x_b, kf, sw, kbar)
+            new_state = dict(state)
+            new_params = stages.server_update(algo, state, params, agg,
+                                              new_state)
+            new_state["params"] = new_params
+            new_state["round"] = state["round"] + 1
+
+            if algo.uses_nu:
+                transmit, avg_g = stages.orientation_transmit(
+                    algo, params, x_b, g0_b, acc_b, c_b, kf, kbar, lr, lam,
+                    anchor_i=anchor_i)
+                contrib = tree_wsum(sw, transmit)
+                # convex mix even when mass > 1 (duplicate reporters): keep
+                # ρ = min(mass, 1) of the new signal, renormalized — for
+                # mass ≤ 1 this is exactly (1 − mass)·ν + contrib, so the
+                # synchronous reduction (mass = 1) is untouched
+                rho = jnp.minimum(mass, 1.0)
+                new_state["nu"] = jax.tree.map(
+                    lambda nu, c: ((1.0 - rho) * nu.astype(jnp.float32)
+                                   + (rho / mass) * c.astype(jnp.float32)
+                                   ).astype(nu.dtype),
+                    state["nu"], contrib)
+                # duplicate idx (a fast client reporting twice into one
+                # buffer) resolves arbitrarily between its two same-buffer
+                # reports — both are current to within one update
+                new_state["nu_i"] = jax.tree.map(
+                    lambda nui, g: nui.at[idx].set(g.astype(nui.dtype)),
+                    state["nu_i"], avg_g)
+
+            metrics = {"loss": jnp.dot(sw, loss0) / mass, "kbar": kbar,
+                       "mass": mass}
+            return new_state, metrics
+
+        return step
+
+    # -- host-side event loop ------------------------------------------------
+
+    def _client_batch(self, client: int, d: int, future_readers) -> PyTree:
+        """Row ``client`` of the d-th dispatch wave.
+
+        ``round_batches`` generates the full (M, …) wave; rows for the other
+        clients still in flight on wave d (``future_readers``) are cached so
+        the wave is generated once, and every entry is consumed exactly once
+        at its owner's arrival — cache size stays ≤ #in-flight tasks."""
+        row = self._batch_cache.pop((d, client), None)
+        if row is None:
+            wave = self.batcher.round_batches(d, self.k_max)
+            for j in future_readers:
+                if j != client and (d, j) not in self._batch_cache:
+                    self._batch_cache[(d, j)] = jax.tree.map(
+                        lambda a: a[j], wave)
+            row = jax.tree.map(lambda a: a[client], wave)
+        return row
+
+    def run(self, t_updates: int, eval_every: int = 1,
+            verbose: bool = False) -> History:
+        hist = History()
+        m = self.clock.m
+        fed = self.fed
+        heap: list[tuple[float, int, int]] = []
+        # i -> (ver, K, wave, t_dispatch)
+        inflight: dict[int, tuple[int, int, int, float]] = {}
+        waves = np.zeros(m, np.int64)
+        seq = 0
+
+        def dispatch(i: int, t_now: float, version: int) -> None:
+            nonlocal seq
+            d = int(waves[i])
+            k = int(self.k_schedule[d % len(self.k_schedule), i])
+            inflight[i] = (version, k, d, t_now)
+            waves[i] += 1
+            heapq.heappush(heap, (t_now + self.clock.duration(i, k), seq, i))
+            seq += 1
+
+        for i in range(m):
+            dispatch(i, 0.0, 0)
+
+        for upd in range(t_updates):
+            # Event-accurate fill: pop one report at a time and re-dispatch
+            # its client IMMEDIATELY on the current (pre-update) model — the
+            # server only steps when the buffer fills, so a fast client's
+            # next report can land inside this same buffer (as in FedBuff,
+            # where 'M' reports' counts reports, not distinct clients).
+            pending: list[tuple[float, int, tuple]] = []
+            while len(pending) < self.buffer:
+                t_arr, _, i = heapq.heappop(heap)
+                pending.append((t_arr, i, inflight.pop(i)))
+                dispatch(i, t_arr, self.version)
+            now = pending[-1][0]
+            ids = [p[1] for p in pending]
+            vs, ks, ds, _ = zip(*(p[2] for p in pending))
+
+            tau = self.version - np.asarray(vs)
+            s = staleness_weight(tau, fed.staleness, fed.staleness_a,
+                                 fed.staleness_b)
+            sw = jnp.asarray(self.weights[ids] * s, jnp.float32)
+
+            if len(set(vs)) == 1:
+                # common low-staleness regime (and the buffer = M sanity
+                # path): one shared anchor broadcast, not B stacked copies
+                anchors = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None],
+                                               (len(vs),) + a.shape),
+                    self._hist[vs[0]][0])
+            else:
+                anchors = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *(self._hist[v][0] for v in vs))
+            if not self.algo.uses_nu:
+                nu_anchor = jnp.zeros(())
+            elif len(set(vs)) == 1:
+                nu_anchor = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None],
+                                               (len(vs),) + a.shape),
+                    self._hist[vs[0]][1])
+            else:
+                nu_anchor = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                         *(self._hist[v][1] for v in vs))
+            readers: dict[int, set[int]] = {}
+            for j, (_, _, dj, _) in inflight.items():
+                readers.setdefault(dj, set()).add(j)
+            for j, dj in zip(ids, ds):
+                readers.setdefault(dj, set()).add(j)
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *(self._client_batch(i, d, readers[d])
+                  for i, d in zip(ids, ds)))
+
+            lam = (float(self.lam_schedule(self.version))
+                   if self.lam_schedule else self.algo.lam)
+            t0 = time.perf_counter()
+            self.state, metrics = self._step(
+                self.state, anchors, nu_anchor, batches,
+                jnp.asarray(ks, jnp.int32), sw,
+                jnp.asarray(ids, jnp.int32), jnp.float32(lam))
+            pre_version = self.version
+            self.version += 1
+            self._hist[self.version] = (self.state["params"],
+                                        self.state.get("nu"))
+            # Tie upgrade: a client whose report landed at the very instant
+            # the buffer filled was re-dispatched and the server stepped at
+            # the same timestamp — it receives the FRESH model (zero elapsed
+            # time on its new task, so only the anchor version changes).
+            # With buffer = M and equal speeds every arrival ties at ``now``,
+            # preserving the exact synchronous reduction.
+            for t_arr, i, _ in pending:
+                if t_arr == now and i in inflight:
+                    ver, k, d, t_disp = inflight[i]
+                    if ver == pre_version and t_disp == t_arr:
+                        inflight[i] = (self.version, k, d, t_disp)
+
+            # prune model versions no in-flight task references — a
+            # straggler pins its old version while the head advances, so
+            # prune to the referenced SET (≤ M + 1 entries with the current
+            # version), not a low-water mark.  (The batch cache self-
+            # consumes: every entry is popped at its owner's arrival.)
+            live = {v for v, _, _, _ in inflight.values()} | {self.version}
+            for v in [v for v in self._hist if v not in live]:
+                del self._hist[v]
+
+            hist.loss.append(float(metrics["loss"]))
+            hist.kbar.append(float(metrics["kbar"]))
+            hist.wall.append(time.perf_counter() - t0)
+            hist.sim_time.append(now)
+            hist.staleness.append(float(tau.mean()))
+            if self.eval_fn is not None and (upd + 1) % eval_every == 0:
+                hist.metric.append(float(self.eval_fn(self.state["params"])))
+            if verbose and (upd % 10 == 0 or upd == t_updates - 1):
+                mtr = hist.metric[-1] if hist.metric else float("nan")
+                print(f"  update {upd:4d}  t={now:8.2f}  "
+                      f"loss={hist.loss[-1]:.4f}  metric={mtr:.4f}  "
+                      f"stale={tau.mean():.1f}")
+        return hist
+
+    @property
+    def params(self) -> PyTree:
+        return self.state["params"]

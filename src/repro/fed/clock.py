@@ -1,0 +1,67 @@
+"""Client wall-clock model for the buffered semi-asynchronous engine.
+
+The paper's *step* asynchronism keeps rounds synchronous in wall-clock time:
+fast hardware spends the same round duration on more local steps (K_i ∝
+speed).  *Round* asynchronism (Xie et al. FedAsync; Nguyen et al. FedBuff)
+is the complementary regime modeled here: K_i is fixed by the schedule and
+heterogeneous hardware makes report times diverge, so the server sees a
+stream of stale updates instead of aligned rounds (DESIGN.md §5).
+
+``ClientClock`` maps (client, K_i) → simulated duration; the async engine
+orders report events with it.  Speeds are *steps per unit time*; a fixed
+per-report ``latency`` models the upload/download overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientClock:
+    """Per-client execution-speed model."""
+    speeds: np.ndarray                    # (M,) local steps per unit time
+    latency: np.ndarray                   # (M,) fixed per-report overhead
+
+    @property
+    def m(self) -> int:
+        return len(self.speeds)
+
+    def duration(self, client: int, k_steps: int) -> float:
+        """Simulated seconds between dispatch and report of one task."""
+        return float(k_steps / self.speeds[client]
+                     + self.latency[client])
+
+    def round_time(self, k_steps: np.ndarray) -> float:
+        """Synchronous-round duration: the straggler defines the round."""
+        k = np.broadcast_to(np.asarray(k_steps, np.float64), (self.m,))
+        return float(np.max(k / self.speeds + self.latency))
+
+
+def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,
+               latency: float = 0.0, seed: int = 0) -> ClientClock:
+    """Sample per-client speeds.
+
+    fixed     : every client identical (async arrivals degenerate to
+                dispatch order — the sync-equivalence regime).
+    uniform   : speeds ~ U[0.5, 1.5].
+    lognormal : speeds ~ LogNormal(0, σ) — the long-tail straggler regime
+                reported for production FL fleets.
+    bimodal   : m−1 unit-speed devices + one 10× "GPU client" (the paper's
+                Raspberry-Pi + GPU hardware mix, §6.1).
+    """
+    rng = np.random.default_rng(seed)
+    if dist == "fixed":
+        speeds = np.ones(m)
+    elif dist == "uniform":
+        speeds = rng.uniform(0.5, 1.5, m)
+    elif dist == "lognormal":
+        speeds = rng.lognormal(0.0, sigma, m)
+    elif dist == "bimodal":
+        speeds = np.ones(m)
+        speeds[-1] = 10.0
+    else:
+        raise ValueError(f"unknown speed_dist {dist!r}")
+    return ClientClock(speeds=speeds,
+                       latency=np.full(m, float(latency)))

@@ -29,6 +29,10 @@ class History:
     kbar: list[float] = dataclasses.field(default_factory=list)
     wall: list[float] = dataclasses.field(default_factory=list)
     per_client: list[list[float]] = dataclasses.field(default_factory=list)
+    # buffered-async engine (fed/async_engine.py): simulated arrival time of
+    # each server update and the mean staleness of its buffer
+    sim_time: list[float] = dataclasses.field(default_factory=list)
+    staleness: list[float] = dataclasses.field(default_factory=list)
 
     def fairness(self) -> Optional[dict]:
         """FL fairness of the final round: worst-client metric and the
@@ -75,16 +79,19 @@ class FederatedSimulation:
                         else jnp.full((fed.n_clients,),
                                       1.0 / fed.n_clients, jnp.float32))
         self.state = rounds.init_state(params, fed.n_clients, self.algo)
-        self._round_cache: dict[float, Callable] = {}
+        self._round: Optional[Callable] = None
         self._loss_fn = loss_fn
 
-    def _round_fn(self, lam: float) -> Callable:
-        if lam not in self._round_cache:
-            algo = dataclasses.replace(self.algo, lam=lam)
-            fn = rounds.make_round(self._loss_fn, algo, lr=self.fed.lr,
+    def _round_fn(self) -> Callable:
+        """One jitted round for EVERY λ: the round function takes λ as a
+        traced scalar argument, so ``lam_schedule`` never retraces (the old
+        cache was keyed on the float λ — one fresh ``jax.jit`` trace per
+        round under any non-constant schedule)."""
+        if self._round is None:
+            fn = rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
                                    k_max=self.k_max)
-            self._round_cache[lam] = jax.jit(fn)
-        return self._round_cache[lam]
+            self._round = jax.jit(fn)
+        return self._round
 
     def run(self, t_rounds: int, eval_every: int = 1,
             verbose: bool = False) -> History:
@@ -92,12 +99,12 @@ class FederatedSimulation:
         for t in range(t_rounds):
             lam = (float(self.lam_schedule(t)) if self.lam_schedule
                    else self.algo.lam)
-            round_fn = self._round_fn(lam)
+            round_fn = self._round_fn()
             k_t = jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
             batches = self.batcher.round_batches(t, self.k_max)
             t0 = time.perf_counter()
             self.state, metrics = round_fn(self.state, batches, k_t,
-                                           self.weights)
+                                           self.weights, jnp.float32(lam))
             loss = float(metrics["loss"])
             hist.loss.append(loss)
             hist.kbar.append(float(metrics["kbar"]))

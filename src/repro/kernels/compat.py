@@ -1,0 +1,15 @@
+"""Pallas API compatibility shims.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` →
+``CompilerParams`` around jax 0.5; the kernels are written against the new
+name and this shim keeps them running on the older toolchain baked into the
+container.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, s_out_ref, s_ref, *,
                 n_chunks: int):
@@ -99,7 +101,7 @@ def ssd_scan_bhclp(xdt: jax.Array, da: jax.Array, b: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((B, H, C, L, P), xdt.dtype),
                    jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xdt, da, b, c)

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.dist import set_mesh_rules
+from repro.dist import set_mesh_rules, use_mesh
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import mesh_rules
 from repro.models.model import serve_decode, serve_prefill
@@ -54,7 +54,7 @@ def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
 
 def lower_serve(cfg: ModelConfig, shape: ShapeConfig, mesh, *, kind: str):
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if kind == "prefill":
             jitted, bundle = build_prefill(cfg, shape, mesh)
             lowered = jitted.lower(bundle["params"], bundle["batch"],

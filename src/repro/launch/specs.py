@@ -98,7 +98,11 @@ def param_pspec(path, shape: tuple[int, ...], model_size: int) -> P:
 
 
 def _prepend(pspec: P, axes) -> P:
-    return P(axes if axes else None, *pspec)
+    # single physical axis enters the spec as the bare name (same idiom as
+    # cache_pspec), multi-axis as a tuple
+    if not axes:
+        return P(None, *pspec)
+    return P(axes if len(axes) > 1 else axes[0], *pspec)
 
 
 def tree_pspecs(tree: PyTree, model_size: int,

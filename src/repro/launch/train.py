@@ -17,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
 from repro.core import rounds
 from repro.core.fedopt import get_algorithm
-from repro.dist import set_mesh_rules
+from repro.dist import set_mesh_rules, use_mesh
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import data_axes, mesh_rules, model_axes
 from repro.models.model import lm_loss
@@ -74,7 +74,7 @@ def build_train_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh, fed: FedConfig,
                 *, k_max: int = 4):
     """.lower() the round on ShapeDtypeStructs (no allocation)."""
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted, bundle = build_train_round(cfg, shape, mesh, fed, k_max=k_max)
         s = bundle["specs"]
         lowered = jitted.lower(s["state"], s["batches"], s["k_steps"],
@@ -136,7 +136,7 @@ def main() -> None:
     cfg = specs_lib.bf16_config(cfg) if not args.reduced else cfg
     fed = FedConfig(algorithm=args.algo, lr=0.3 if args.reduced else 3e-2)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted, bundle = build_train_round(cfg, shape, mesh, fed,
                                            k_max=args.k_max)
         m, b_local = bundle["m"], bundle["b_local"]

@@ -1,0 +1,257 @@
+"""FROZEN copy of the pre-refactor round engine (seed commit 4f5b781).
+
+Golden reference for tests/test_golden_equivalence.py ONLY — the live engine
+is the layered composition in src/repro/core/stages.py.  Do not edit; do not
+import outside the tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedopt import Algorithm
+
+PyTree = Any
+
+
+def tree_zeros(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_stack_zeros(tree: PyTree, m: int) -> PyTree:
+    return jax.tree.map(lambda a: jnp.zeros((m,) + a.shape, a.dtype), tree)
+
+
+def init_state(params: PyTree, n_clients: int, algo: Algorithm) -> dict:
+    """Server + client state.  ν/ν⁽ⁱ⁾ start at zero: the first round then
+    runs plain (uncalibrated) local SGD, matching the paper's init where
+    ν⁽ⁱ⁾ = ∇f_i(x₁) is unknown before any gradient is computed."""
+    state = {"params": params, "round": jnp.zeros((), jnp.int32)}
+    if algo.uses_nu:
+        state["nu"] = tree_zeros(params)
+        state["nu_i"] = tree_stack_zeros(params, n_clients)
+    if algo.server_opt == "momentum":
+        state["server_m"] = tree_zeros(params)
+    elif algo.server_opt == "adam":
+        state["server_m"] = tree_zeros(params)
+        state["server_v"] = tree_zeros(params)
+    return state
+
+
+def _server_update(algo: Algorithm, state: dict, params0: PyTree,
+                   agg: PyTree, new_state: dict) -> PyTree:
+    """FedOpt server step on the round pseudo-gradient Δ = agg − x̃_t
+    (Reddi et al. 2021).  server_opt="sgd", server_lr=1 reproduces plain
+    averaging exactly."""
+    delta = jax.tree.map(
+        lambda a, p: a.astype(jnp.float32) - p.astype(jnp.float32),
+        agg, params0)
+    lr, b1 = algo.server_lr, algo.server_beta1
+    if algo.server_opt == "sgd":
+        if lr == 1.0:
+            return agg
+        return jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + lr * d).astype(p.dtype),
+            params0, delta)
+    if algo.server_opt == "momentum":                   # FedAvgM
+        m = jax.tree.map(lambda mm, d: b1 * mm.astype(jnp.float32) + d,
+                         state["server_m"], delta)
+        new_state["server_m"] = jax.tree.map(
+            lambda mm, p: mm.astype(p.dtype), m, params0)
+        return jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) + lr * mm).astype(p.dtype),
+            params0, m)
+    if algo.server_opt == "adam":                       # FedAdam
+        b2, eps = 0.999, 1e-8
+        t = state["round"].astype(jnp.float32) + 1.0
+        m = jax.tree.map(
+            lambda mm, d: b1 * mm.astype(jnp.float32) + (1 - b1) * d,
+            state["server_m"], delta)
+        v = jax.tree.map(
+            lambda vv, d: b2 * vv.astype(jnp.float32) + (1 - b2) * d * d,
+            state["server_v"], delta)
+        new_state["server_m"] = jax.tree.map(
+            lambda mm, p: mm.astype(p.dtype), m, params0)
+        new_state["server_v"] = jax.tree.map(
+            lambda vv, p: vv.astype(p.dtype), v, params0)
+        bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+        return jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32)
+                               + lr * (mm / bc1)
+                               / (jnp.sqrt(vv / bc2) + eps)).astype(p.dtype),
+            params0, m, v)
+    raise ValueError(algo.server_opt)
+
+
+def quantize_int8(tree: PyTree) -> PyTree:
+    """Per-client-per-leaf symmetric int8 fake-quantization of the
+    transmitted orientation (beyond-paper comms ablation): scale =
+    amax/127 over each client's tensor, round-to-nearest.  Halves the ν
+    upload vs bf16; EXPERIMENTS.md reports the accuracy cost."""
+    def q(a):
+        red = tuple(range(1, a.ndim))
+        scale = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=red,
+                        keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        return (jnp.round(a.astype(jnp.float32) / scale) * scale
+                ).astype(a.dtype)
+    return jax.tree.map(q, tree)
+
+
+def make_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
+               algo: Algorithm, *, lr: float, k_max: int,
+               track_nu: str = "delta",
+               spmd_axis_name=None,
+               quantize_transmit: bool = False,
+               param_constraint: Optional[Callable[[PyTree, int], PyTree]] = None):
+    """Build ``round_fn(state, batches, k_steps, weights) -> (state, metrics)``.
+
+    batches: pytree with leading dims (M, k_max, ...) — one microbatch per
+    client per local step.  k_steps: (M,) int32.  weights: (M,) fp32 ω_i.
+    ``param_constraint(tree, n_client_dims)`` optionally pins shardings at
+    round boundaries.
+    """
+    needs_first = algo.strategy in ("fedagrac", "first", "reverse")
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def constrain(tree, client_dims):
+        if param_constraint is None:
+            return tree
+        return param_constraint(tree, client_dims)
+
+    def round_fn(state: dict, batches: PyTree, k_steps: jax.Array,
+                 weights: jax.Array):
+        params0 = state["params"]
+        m = k_steps.shape[0]
+        kbar = jnp.dot(weights, k_steps.astype(jnp.float32))
+
+        if algo.uses_nu:
+            c_all = jax.tree.map(lambda nu, nui: (nu[None] - nui) if nui.ndim
+                                 else nu - nui, state["nu"], state["nu_i"])
+        else:
+            # zero-size placeholder keeps the vmap signature uniform
+            c_all = jax.tree.map(
+                lambda a: jnp.zeros((m,) + (0,) * a.ndim, a.dtype), params0)
+
+        def client_run(c_i, batch_i, K_i):
+            lam_c = (jax.tree.map(lambda c: algo.lam * c, c_i)
+                     if algo.uses_nu else None)
+
+            def step(carry, xs):
+                k, batch_k = xs
+                x, g0, nu_acc = carry
+                loss, g = grad_fn(x, batch_k)
+                if algo.prox_mu:
+                    g = jax.tree.map(lambda gg, xx, x0: gg + algo.prox_mu * (xx - x0),
+                                     g, x, params0)
+                active = k < K_i
+                if algo.uses_nu:
+                    upd = jax.tree.map(lambda xx, gg, cc: xx - lr * (gg + cc),
+                                       x, g, lam_c)
+                else:
+                    upd = jax.tree.map(lambda xx, gg: xx - lr * gg, x, g)
+                x = jax.tree.map(lambda old, new: jnp.where(active, new, old),
+                                 x, upd)
+                if needs_first:
+                    g0 = jax.tree.map(lambda a, gg: jnp.where(k == 0, gg, a),
+                                      g0, g)
+                if track_nu == "explicit" and algo.uses_nu:
+                    w = jnp.where(active, 1.0 / K_i.astype(jnp.float32), 0.0)
+                    nu_acc = jax.tree.map(lambda a, gg: a + w * gg, nu_acc, g)
+                return (x, g0, nu_acc), loss
+
+            g0_0 = tree_zeros(params0) if needs_first else jnp.zeros(())
+            acc_0 = (tree_zeros(params0)
+                     if (track_nu == "explicit" and algo.uses_nu)
+                     else jnp.zeros(()))
+            (x, g0, nu_acc), losses = jax.lax.scan(
+                step, (params0, g0_0, acc_0),
+                (jnp.arange(k_max), batch_i))
+            return x, g0, nu_acc, losses[0]
+
+        x_i, g0_i, acc_i, loss0 = jax.vmap(
+            client_run, spmd_axis_name=spmd_axis_name)(c_all, batches, k_steps)
+        x_i = constrain(x_i, 1)
+
+        kf = k_steps.astype(jnp.float32)
+
+        def wsum(tree):
+            # accumulate the client average in f32, return in the state
+            # dtype: f32 weights would otherwise promote the whole round
+            # state to f32 — doubling every activation/grad collective and
+            # breaking state-dtype stability across rounds (§Perf #3)
+            return jax.tree.map(
+                lambda a: jnp.einsum(
+                    "m,m...->...", weights,
+                    a.astype(jnp.float32)).astype(a.dtype), tree)
+
+        # ---- aggregation --------------------------------------------------
+        if algo.normalize:                                  # FedNova
+            deltas = jax.tree.map(
+                lambda xi, p0: (xi.astype(jnp.float32) - p0[None])
+                / _expand(kf, xi), x_i, params0)
+            new_params = jax.tree.map(
+                lambda p0, d: (p0 + kbar * jnp.einsum("m,m...->...", weights,
+                                                      d)).astype(p0.dtype),
+                params0, deltas)
+        else:
+            new_params = wsum(x_i)
+
+        new_state = dict(state)
+        new_params = _server_update(algo, state, params0, new_params,
+                                    new_state)
+        new_params = constrain(new_params, 0)
+        new_state["params"] = new_params
+        new_state["round"] = state["round"] + 1
+
+        # ---- orientation update (Alg. 1, lines 11/14/23) -------------------
+        if algo.uses_nu:
+            if track_nu == "explicit":
+                avg_g = acc_i
+            else:
+                avg_g = jax.tree.map(
+                    lambda x0, xi, ci: ((x0[None].astype(jnp.float32)
+                                         - xi.astype(jnp.float32))
+                                        / (lr * _expand(kf, xi))
+                                        - algo.lam * ci.astype(jnp.float32)
+                                        ).astype(x0.dtype),
+                    params0, x_i, c_all)
+            if algo.strategy == "avg":
+                transmit = avg_g
+            elif algo.strategy == "first":
+                transmit = g0_i
+            else:
+                # K_i > K̄ with a tie tolerance: K_i are integers (spacing
+                # 1) but K̄ is an f32 dot whose summation ORDER can leave
+                # it 1 ulp under an exact tie — without the epsilon, a
+                # client-permutation flips every tied client from "slow"
+                # (send averaged) to "fast" (send first), found by the
+                # permutation-invariance property test
+                fast = kf > kbar + 1e-4 * jnp.maximum(kbar, 1.0)  # (M,)
+                pick = (lambda f, a: jnp.where(_expand_b(fast, a), f, a)) \
+                    if algo.strategy == "fedagrac" else \
+                    (lambda f, a: jnp.where(_expand_b(fast, a), a, f))
+                transmit = jax.tree.map(pick, g0_i, avg_g)
+            if quantize_transmit:
+                transmit = quantize_int8(transmit)
+            new_state["nu"] = constrain(wsum(transmit), 0)
+            # Line 11: the *local* reference ν⁽ⁱ⁾ is always the averaged grad
+            new_state["nu_i"] = constrain(avg_g, 1)
+
+        metrics = {"loss": jnp.dot(weights, loss0), "kbar": kbar}
+        return new_state, metrics
+
+    return round_fn
+
+
+def _expand(v: jax.Array, like: jax.Array) -> jax.Array:
+    """(M,) -> (M, 1, 1, ...) broadcastable against like (M, ...)."""
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def _expand_b(v: jax.Array, like: jax.Array) -> jax.Array:
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))

@@ -1,0 +1,281 @@
+"""Buffered semi-asynchronous engine (fed/async_engine.py + fed/clock.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import rounds, stages
+from repro.core.fedopt import get_algorithm
+from repro.data import FederatedBatcher, fedprox_synthetic
+from repro.fed import (BufferedAsyncSimulation, FederatedSimulation,
+                       make_clock, staleness_weight)
+from repro.models.simple import lr_loss, quad_loss
+
+M = 8
+
+
+# ---------------------------------------------------------------------------
+# staleness weights
+# ---------------------------------------------------------------------------
+
+def test_staleness_constant_is_one():
+    np.testing.assert_array_equal(
+        staleness_weight(np.arange(10), "constant"), np.ones(10))
+
+
+def test_staleness_zero_tau_is_one():
+    for mode in ("constant", "hinge", "poly"):
+        assert staleness_weight(0, mode, a=0.7, b=3) == pytest.approx(1.0)
+
+
+def test_staleness_poly_values():
+    np.testing.assert_allclose(
+        staleness_weight(np.array([0, 1, 3]), "poly", a=0.5),
+        [1.0, 2.0 ** -0.5, 4.0 ** -0.5])
+
+
+def test_staleness_hinge_values():
+    # free budget b=4: τ ≤ 4 undiscounted, then harmonic decay
+    np.testing.assert_allclose(
+        staleness_weight(np.array([0, 4, 5, 14]), "hinge", a=0.5, b=4),
+        [1.0, 1.0, 1.0 / 1.5, 1.0 / 6.0])
+
+
+@pytest.mark.parametrize("mode", ["hinge", "poly"])
+def test_staleness_monotone_nonincreasing(mode):
+    s = staleness_weight(np.arange(30), mode, a=0.5, b=4)
+    assert np.all(np.diff(s) <= 0)
+    assert np.all(s > 0)
+
+
+# ---------------------------------------------------------------------------
+# client wall-clock model
+# ---------------------------------------------------------------------------
+
+def test_clock_duration_scales_with_steps():
+    clock = make_clock(4, dist="fixed", latency=0.5)
+    assert clock.duration(0, 10) == pytest.approx(10.5)
+    assert clock.duration(0, 20) == pytest.approx(20.5)
+
+
+def test_clock_bimodal_has_one_fast_client():
+    clock = make_clock(5, dist="bimodal")
+    assert clock.speeds[-1] == pytest.approx(10.0)
+    np.testing.assert_allclose(clock.speeds[:-1], 1.0)
+    # sync round time is set by the stragglers, not the fast client
+    assert clock.round_time(np.full(5, 10)) == pytest.approx(10.0)
+
+
+def test_clock_seeded_reproducible():
+    a = make_clock(16, dist="lognormal", sigma=0.8, seed=3)
+    b = make_clock(16, dist="lognormal", sigma=0.8, seed=3)
+    np.testing.assert_array_equal(a.speeds, b.speeds)
+
+
+# ---------------------------------------------------------------------------
+# buffered aggregation stages
+# ---------------------------------------------------------------------------
+
+def test_buffered_mean_reduces_to_weighted_average():
+    """Identical anchors + weights summing to 1 ⇒ plain weighted average."""
+    rng = np.random.default_rng(0)
+    p0 = {"x": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+    x_i = {"x": jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32))}
+    anchor = {"x": jnp.broadcast_to(p0["x"], (4, 5))}
+    w = jnp.array([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    kf = jnp.full((4,), 3.0)
+    out = stages.buffered_mean(p0, anchor, x_i, kf, w, jnp.float32(3.0))
+    want = stages.aggregate_mean(p0, x_i, kf, w, jnp.float32(3.0))
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(want["x"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_buffered_fednova_normalizes_per_client_steps():
+    rng = np.random.default_rng(1)
+    p0 = {"x": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+    deltas = rng.normal(size=(2, 5)).astype(np.float32)
+    anchor = {"x": jnp.broadcast_to(p0["x"], (2, 5))}
+    x_i = {"x": anchor["x"] + deltas}
+    w = jnp.array([0.5, 0.5], jnp.float32)
+    kf = jnp.array([2.0, 8.0])
+    kbar = jnp.dot(w, kf)
+    out = stages.buffered_fednova(p0, anchor, x_i, kf, w, kbar)
+    want = np.asarray(p0["x"]) + 5.0 * (0.5 * deltas[0] / 2 + 0.5 * deltas[1] / 8)
+    np.testing.assert_allclose(np.asarray(out["x"]), want, rtol=1e-5)
+
+
+def test_stale_anchor_aggregates_the_delta_not_the_params():
+    """A stale client's contribution is its OWN progress δ = x − anchor, not
+    its absolute parameters — the buffered form must not drag the server
+    back toward an old model version."""
+    p_now = {"x": jnp.full((3,), 10.0)}
+    stale_anchor = {"x": jnp.zeros((1, 3))}          # model 10 versions ago
+    x_i = {"x": jnp.ones((1, 3))}                    # client moved by +1
+    w = jnp.array([0.5], jnp.float32)
+    out = stages.buffered_mean(p_now, stale_anchor, x_i,
+                               jnp.ones((1,)), w, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out["x"]), np.full(3, 10.5))
+
+
+# ---------------------------------------------------------------------------
+# per-client anchors in the client-update stage
+# ---------------------------------------------------------------------------
+
+def test_per_client_anchor_matches_broadcast_anchor():
+    fed = FedConfig(algorithm="fedagrac", n_clients=4, lr=0.01,
+                    calibration_rate=0.5)
+    algo = get_algorithm("fedagrac", fed)
+    rng = np.random.default_rng(0)
+    params = {"x": jnp.asarray(rng.normal(size=(6,)).astype(np.float32))}
+    b = {"A": jnp.asarray(rng.normal(size=(4, 3, 6, 6)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(4, 3, 6)).astype(np.float32)),
+         "c0": jnp.zeros((4, 3))}
+    ks = jnp.array([1, 2, 3, 3], jnp.int32)
+    c = jax.tree.map(lambda a: jnp.zeros((4,) + params["x"].shape), params)
+    shared = stages.make_client_update(quad_loss, algo, lr=0.01, k_max=3)
+    stacked = stages.make_client_update(quad_loss, algo, lr=0.01, k_max=3,
+                                        per_client_anchor=True)
+    anchor_i = jax.tree.map(lambda a: jnp.broadcast_to(a, (4,) + a.shape),
+                            params)
+    out_a = shared(params, c, b, ks, jnp.float32(0.5))
+    out_b = stacked(anchor_i, c, b, ks, jnp.float32(0.5))
+    for la, lb in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: buffer = M reduces to the synchronous round
+# ---------------------------------------------------------------------------
+
+def _task(seed=0):
+    key = jax.random.PRNGKey(seed)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    params = {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+    return data, parts, params
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedagrac", "fednova",
+                                  "scaffold"])
+def test_full_buffer_equals_synchronous_round(algo):
+    """buffer = M + identical speeds: every server update aggregates exactly
+    one aligned wave with zero staleness ⇒ the synchronous engine."""
+    data, parts, params = _task()
+    ks = np.full((50, M), 4, np.int32)
+    t = 5
+    fed_sync = FedConfig(algorithm=algo, n_clients=M, lr=0.05,
+                         calibration_rate=0.5, weights="data")
+    sync = FederatedSimulation(lr_loss, params, fed_sync,
+                               FederatedBatcher(data, parts, batch_size=10),
+                               k_schedule=ks)
+    h_sync = sync.run(t)
+    fed_async = dataclasses.replace(fed_sync, buffer_size=M,
+                                    speed_dist="fixed")
+    async_ = BufferedAsyncSimulation(
+        lr_loss, params, fed_async,
+        FederatedBatcher(data, parts, batch_size=10), k_schedule=ks)
+    h_async = async_.run(t)
+    for a, b in zip(jax.tree.leaves(sync.state),
+                    jax.tree.leaves(async_.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(h_sync.loss, h_async.loss, rtol=1e-5)
+    assert h_async.staleness == [0.0] * t
+
+
+def test_buffered_async_runs_and_tracks_staleness():
+    data, parts, params = _task()
+    fed = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
+                    calibration_rate=0.5, buffer_size=3, staleness="hinge",
+                    speed_dist="lognormal", speed_sigma=1.0)
+    sim = BufferedAsyncSimulation(
+        lr_loss, params, fed, FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=np.full((50, M), 4, np.int32))
+    h = sim.run(12)
+    assert len(h.loss) == 12 and np.all(np.isfinite(h.loss))
+    # simulated time advances monotonically; heterogeneous speeds + partial
+    # buffers must produce some genuinely stale aggregations
+    assert h.sim_time == sorted(h.sim_time)
+    assert max(h.staleness) > 0
+
+
+def test_history_pruning_bounds_memory():
+    data, parts, params = _task()
+    fed = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
+                    buffer_size=2, speed_dist="lognormal", speed_sigma=1.5)
+    sim = BufferedAsyncSimulation(
+        lr_loss, params, fed, FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=np.full((50, M), 4, np.int32))
+    sim.run(20)
+    # version history holds only versions still referenced by in-flight
+    # tasks (≤ M distinct) — never all 20
+    assert len(sim._hist) <= M + 1
+    assert len(sim._batch_cache) <= M + 1
+
+
+def test_staleness_discount_shrinks_the_update():
+    """Same trajectory, hinge vs constant: discounted stale updates move the
+    server strictly less far from init."""
+    data, parts, params = _task()
+    out = {}
+    for mode in ("constant", "hinge"):
+        fed = FedConfig(algorithm="fedavg", n_clients=M, lr=0.05,
+                        buffer_size=1, staleness=mode, staleness_a=2.0,
+                        staleness_b=0, speed_dist="lognormal",
+                        speed_sigma=1.5)
+        sim = BufferedAsyncSimulation(
+            lr_loss, params, fed,
+            FederatedBatcher(data, parts, batch_size=10),
+            k_schedule=np.full((50, M), 4, np.int32))
+        h = sim.run(16)
+        assert max(h.staleness) > 0          # buffer=1 ⇒ staleness exists
+        out[mode] = float(sum(np.linalg.norm(np.asarray(v))
+                              for v in jax.tree.leaves(sim.params)))
+    assert out["hinge"] < out["constant"]
+
+
+def test_duplicate_reporter_keeps_nu_mixing_convex():
+    """A high-data-weight fast client reporting twice into one buffer pushes
+    Σ w̃ past 1; the ν mix must stay convex (no sign-flipped decay) and the
+    run bounded."""
+    from repro.fed.clock import ClientClock
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, 3, alpha=1.0, beta=1.0)
+    # make client 0 own most of the data (ω₀ ≈ 0.58) AND be 50× faster
+    cut = 3 * len(parts[1]) // 4
+    parts = [np.concatenate([parts[0], parts[1][:cut]]),
+             parts[1][cut:], parts[2]]
+    clock = ClientClock(speeds=np.array([50.0, 1.0, 1.0]),
+                        latency=np.zeros(3))
+    fed = FedConfig(algorithm="fedagrac", n_clients=3, lr=0.05,
+                    calibration_rate=0.5, weights="data", buffer_size=2)
+    sim = BufferedAsyncSimulation(
+        lr_loss, {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}, fed,
+        FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=np.full((300, 3), 3, np.int32), clock=clock)
+    masses, orig = [], sim._step
+
+    def spy(*args):
+        state, metrics = orig(*args)
+        masses.append(float(metrics["mass"]))
+        return state, metrics
+
+    sim._step = spy
+    h = sim.run(40)
+    assert max(masses) > 1.0, masses        # the Σw̃ > 1 regime really occurs
+    assert all(np.isfinite(h.loss))
+    nu_norm = max(float(jnp.max(jnp.abs(v)))
+                  for v in jax.tree.leaves(sim.state["nu"]))
+    assert nu_norm < 1e3, nu_norm
+
+
+def test_buffer_size_validation():
+    data, parts, params = _task()
+    fed = FedConfig(algorithm="fedavg", n_clients=M, buffer_size=M + 1)
+    with pytest.raises(ValueError):
+        BufferedAsyncSimulation(lr_loss, params, fed,
+                                FederatedBatcher(data, parts, batch_size=10))

@@ -30,7 +30,7 @@ from repro.configs.registry import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core import rounds
 from repro.core.fedopt import get_algorithm
-from repro.dist import set_mesh_rules, unset_mesh
+from repro.dist import set_mesh_rules, unset_mesh, use_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.launch import train as train_lib, specs as specs_lib
 from repro.models import model as M
@@ -57,7 +57,7 @@ ref_state, ref_metrics = fn(state0, batches, ks, w)
 # --- (data=4, model=2) mesh --------------------------------------------------
 mesh = make_local_mesh(4, 2)
 shape = ShapeConfig("t", seq_len=s, global_batch=m * b, kind="train")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jitted, bundle = train_lib.build_train_round(cfg, shape, mesh, fed,
                                                  k_max=k_max)
     state0b = rounds.init_state(params, m, algo)
@@ -89,7 +89,7 @@ def test_sharded_decode_matches_single_device():
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import ShapeConfig, reduced
 from repro.configs.registry import get_arch
-from repro.dist import unset_mesh
+from repro.dist import unset_mesh, use_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.launch import serve as serve_lib
 from repro.models import model as M
@@ -106,7 +106,7 @@ ref_logits, _ = M.serve_decode(params, {"tokens": toks}, caches, 0, cfg)
 
 mesh = make_local_mesh(4, 2)
 shape = ShapeConfig("d", seq_len=S, global_batch=B, kind="decode")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jitted, bundle = serve_lib.build_decode(cfg, shape, mesh, kind="decode")
     spmd_logits, _ = jitted(params, {"tokens": toks}, caches,
                             jnp.zeros((), jnp.int32))

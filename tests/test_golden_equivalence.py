@@ -1,0 +1,147 @@
+"""Golden equivalence: the layered engine (core/stages.py) must produce
+BIT-IDENTICAL round outputs to the frozen pre-refactor engine
+(tests/_seed_rounds.py) for every algorithm and engine option."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import _seed_rounds as seed_rounds
+from repro.configs.base import FedConfig
+from repro.core import rounds
+from repro.core.fedopt import ALGORITHMS, get_algorithm
+from repro.models.simple import quad_loss
+
+M, D, K_MAX = 4, 6, 8
+W = jnp.array([0.1, 0.2, 0.3, 0.4], jnp.float32)
+KS = jnp.array([1, 3, 5, 8], jnp.int32)
+
+
+def _batches(key=0):
+    rng = np.random.default_rng(key)
+    return {
+        "A": jnp.asarray(rng.normal(size=(M, K_MAX, D, D)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(M, K_MAX, D)).astype(np.float32)),
+        "c0": jnp.zeros((M, K_MAX)),
+    }
+
+
+def _algo(name, **replace):
+    fed = FedConfig(algorithm=name, n_clients=M, lr=0.01,
+                    calibration_rate=0.5)
+    algo = get_algorithm(name, fed)
+    return dataclasses.replace(algo, **replace) if replace else algo
+
+
+def _run_both(algo, n_rounds=3, **make_kw):
+    state_a = rounds.init_state({"x": jnp.zeros((D,), jnp.float32)}, M, algo)
+    state_b = {k: v for k, v in state_a.items()}
+    fn_seed = jax.jit(seed_rounds.make_round(quad_loss, algo, lr=0.01,
+                                             k_max=K_MAX, **make_kw))
+    fn_new = jax.jit(rounds.make_round(quad_loss, algo, lr=0.01,
+                                       k_max=K_MAX, **make_kw))
+    b = _batches()
+    for _ in range(n_rounds):
+        state_a, metrics_a = fn_seed(state_a, b, KS, W)
+        state_b, metrics_b = fn_new(state_b, b, KS, W)
+    return (state_a, metrics_a), (state_b, metrics_b)
+
+
+def _assert_identical(out_a, out_b):
+    (state_a, metrics_a), (state_b, metrics_b) = out_a, out_b
+    assert set(state_a) == set(state_b)
+    paths_a = jax.tree_util.tree_leaves_with_path(state_a)
+    leaves_b = jax.tree.leaves(state_b)
+    for (path, la), lb in zip(paths_a, leaves_b):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"state leaf {jax.tree_util.keystr(path)} diverged")
+    for k in metrics_a:
+        np.testing.assert_array_equal(np.asarray(metrics_a[k]),
+                                      np.asarray(metrics_b[k]),
+                                      err_msg=f"metric {k!r} diverged")
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_bit_identical_all_algorithms(name):
+    """All 9 algorithms: 3 chained rounds, every state leaf + metric equal."""
+    algo = _algo(name)
+    _assert_identical(*_run_both(algo))
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedagrac"])
+@pytest.mark.parametrize("server_opt,server_lr", [("momentum", 0.7),
+                                                  ("adam", 0.1)])
+def test_bit_identical_server_optimizers(name, server_opt, server_lr):
+    algo = _algo(name, server_opt=server_opt, server_lr=server_lr)
+    _assert_identical(*_run_both(algo))
+
+
+def test_bit_identical_explicit_nu():
+    algo = _algo("fedagrac")
+    _assert_identical(*_run_both(algo, track_nu="explicit"))
+
+
+def test_bit_identical_quantized_transmit():
+    algo = _algo("fedagrac")
+    _assert_identical(*_run_both(algo, quantize_transmit=True))
+
+
+def test_traced_lam_matches_baked_lam():
+    """λ passed as a traced scalar (the no-recompile path) == λ baked into
+    the trace as a compile-time constant."""
+    algo = _algo("fedagrac")
+    state = rounds.init_state({"x": jnp.zeros((D,), jnp.float32)}, M, algo)
+    fn = jax.jit(rounds.make_round(quad_loss, algo, lr=0.01, k_max=K_MAX))
+    b = _batches()
+    baked, _ = fn(dict(state), b, KS, W)
+    traced, _ = fn(dict(state), b, KS, W, jnp.float32(algo.lam))
+    for la, lb in zip(jax.tree.leaves(baked), jax.tree.leaves(traced)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_traced_lam_preserves_bf16_state():
+    """A traced λ is a STRONG f32 scalar; it must not promote a bf16 round
+    state to f32 (the baked python-float λ is weak-typed and never did)."""
+    algo = _algo("fedagrac")
+    params = {"x": jnp.zeros((D,), jnp.bfloat16)}
+    state = rounds.init_state(params, M, algo)
+    b = jax.tree.map(lambda a: a.astype(jnp.bfloat16), _batches())
+    fn = jax.jit(rounds.make_round(quad_loss, algo, lr=0.01, k_max=K_MAX))
+    out, _ = fn(state, b, KS, W, jnp.float32(0.5))
+    assert out["params"]["x"].dtype == jnp.bfloat16
+    assert out["nu"]["x"].dtype == jnp.bfloat16
+
+
+def test_lam_schedule_does_not_retrace():
+    """The simulation compiles ONE round for any λ-schedule (the old cache
+    keyed on the float λ retraced every round)."""
+    from repro.configs.base import FedConfig as FC
+    from repro.data import FederatedBatcher, fedprox_synthetic
+    from repro.fed import FederatedSimulation
+    from repro.models.simple import lr_loss
+
+    traces = []
+
+    def counting_loss(params, batch):
+        traces.append(1)
+        return lr_loss(params, batch)
+
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    fed = FC(algorithm="fedagrac", n_clients=M, lr=0.05)
+    sim = FederatedSimulation(
+        counting_loss, {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))},
+        fed, FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=np.full((8, M), 3, np.int32),
+        lam_schedule=lambda t: 0.1 * (t + 1))        # distinct λ every round
+    sim.run(1)
+    after_first = len(traces)
+    assert after_first > 0
+    sim.run(4)
+    assert len(traces) == after_first, (
+        f"λ-schedule retraced the round: {len(traces)} loss-fn traces "
+        f"after 5 rounds vs {after_first} after 1")

@@ -185,4 +185,10 @@ def test_lambda_schedule_applied(key):
     sim = _make_sim("fedagrac", key)
     sim.lam_schedule = lambda_increase((2,), (0.1, 1.0))
     sim.run(4)
-    assert len(sim._round_cache) == 2     # two λ values ⇒ two compiled rounds
+    # λ is a traced argument of the round: ONE compiled round serves both
+    # schedule values (the old cache compiled one round per distinct λ).
+    # _cache_size is private jax API — the retrace behavior itself is pinned
+    # version-independently by test_lambda_schedule_does_not_retrace.
+    fn = sim._round_fn()
+    if hasattr(fn, "_cache_size"):
+        assert fn._cache_size() == 1
