@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.data import FederatedBatcher, fedprox_synthetic, shard_partition
+from repro.data import (DeviceBatcher, FederatedBatcher, fedprox_synthetic,
+                        shard_partition)
 from repro.fed import FederatedSimulation
 from repro.models.simple import (lr_accuracy, lr_loss, mlp_accuracy,
                                  mlp_init, mlp_loss)
@@ -42,21 +43,27 @@ class Task:
 
 def make_task(kind: str, *, noniid: bool, seed: int = 0,
               m: int = M_CLIENTS, batch: int = 20,
-              batcher_seed: int | None = None) -> Task:
+              batcher_seed: int | None = None,
+              sampler: str = "host") -> Task:
     """kind: "lr" (convex) or "mlp" (non-convex).
 
     The GLOBAL dataset is always the same synthetic(1,1) mixture;
     ``noniid`` only switches the PARTITION (client-generated shards vs an
-    IID shuffle) — the correct Table-1 contrast."""
+    IID shuffle) — the correct Table-1 contrast.  ``sampler`` picks the
+    batcher family (DESIGN.md §9): "host" (numpy per-round gather, the
+    paper-pinned compat mode) or "device" (DeviceBatcher, drawn inside the
+    jitted round chunk)."""
     key = jax.random.PRNGKey(seed)
     data, parts = fedprox_synthetic(key, m, alpha=1.0, beta=1.0,
                                     d=D, n_classes=N_CLASSES)
     if not noniid:
         from repro.data import iid_partition
         parts = iid_partition(len(data), m, seed=seed)
-    batcher = FederatedBatcher(data, parts, batch_size=batch,
-                               seed=seed if batcher_seed is None
-                               else batcher_seed)
+    batcher_cls = {"host": FederatedBatcher,
+                   "device": DeviceBatcher}[sampler]
+    batcher = batcher_cls(data, parts, batch_size=batch,
+                          seed=seed if batcher_seed is None
+                          else batcher_seed)
     if kind == "lr":
         params = {"w": jnp.zeros((D, N_CLASSES)), "b": jnp.zeros((N_CLASSES,))}
         return Task("lr", lr_loss, params, batcher,
@@ -104,7 +111,8 @@ def bimodal_schedule(m: int = M_CLIENTS, k_slow: int = 2,
 def run_sim(task: Task, algorithm: str, t_rounds: int, *,
             k_mean: int = 40, k_var: float = 0.0, k_mode: str = "fixed",
             lam: float = 1.0, lr: float | None = None, seed: int = 0,
-            k_schedule=None, lam_schedule=None):
+            k_schedule=None, lam_schedule=None, eval_every: int = 1,
+            chunk_rounds=None):
     fed = FedConfig(algorithm=algorithm, n_clients=task.batcher.m,
                     k_mean=k_mean, k_var=k_var, k_mode=k_mode,
                     lr=lr if lr is not None else task.lr,
@@ -112,7 +120,8 @@ def run_sim(task: Task, algorithm: str, t_rounds: int, *,
     sim = FederatedSimulation(task.loss_fn, task.params, fed, task.batcher,
                               eval_fn=task.eval_fn, k_schedule=k_schedule,
                               lam_schedule=lam_schedule)
-    return sim.run(t_rounds)
+    return sim.run(t_rounds, eval_every=eval_every,
+                   chunk_rounds=chunk_rounds)
 
 
 def rounds_to(hist, target: float):

@@ -1,6 +1,6 @@
 """Benchmark aggregator: one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME[,NAME…]]
 
 Each module prints CSV rows; headers carry the claim being validated in
 the module docstring.
@@ -11,10 +11,10 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (ablation_int8_nu, fairness, fig2_lambda,
-                        fig3_orientation, fig4_grid, fig5_curves,
-                        kernel_bench, roofline_table, server_opt,
-                        table1_deterioration, table2_utilization,
+from benchmarks import (ablation_int8_nu, engine_bench, fairness,
+                        fig2_lambda, fig3_orientation, fig4_grid,
+                        fig5_curves, kernel_bench, roofline_table,
+                        server_opt, table1_deterioration, table2_utilization,
                         table6_rounds, table_async, thm1_quadratic)
 
 MODULES = {
@@ -32,6 +32,7 @@ MODULES = {
     "fairness": fairness,
     "server_opt": server_opt,
     "roofline": roofline_table,
+    "engine": engine_bench,
 }
 
 
@@ -39,10 +40,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced rounds/grids (CI budget)")
-    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME…]",
+                    help=f"comma-separated subset of {sorted(MODULES)}")
     args = ap.parse_args()
 
-    names = [args.only] if args.only else list(MODULES)
+    names = (args.only.split(",") if args.only else list(MODULES))
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown module(s) {unknown}; choose from "
+                 f"{sorted(MODULES)}")
     failures = []
     for name in names:
         mod = MODULES[name]

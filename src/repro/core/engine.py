@@ -1,0 +1,67 @@
+"""Device-resident chunked execution (DESIGN.md §9).
+
+Both execution engines were host-driven Python loops: one jit dispatch, one
+host sync and (for host batchers) one dataset gather + transfer per round.
+At paper scale (small models, many rounds) that makes every benchmark
+dispatch-bound rather than compute-bound.  ``make_round_chunk`` moves the
+round *loop* onto the device: R rounds run inside one jitted ``lax.scan``
+with donated carry state, stacked per-round inputs, and per-round metrics
+returned as ``(R,)`` arrays — the host syncs only at chunk boundaries
+(the eval cadence).
+
+The scan body is the unmodified layered round (core/stages.py), so a chunk
+of R rounds is bit-identical to R sequential ``jit(round_fn)`` calls —
+pinned for all nine algorithms by tests/test_golden_equivalence.py.
+
+With ``sample_fn`` (a traceable ``t -> batches`` sampler, e.g.
+``DeviceBatcher.sample``), batch *generation* also moves inside the scan:
+the stacked-batches input degenerates to the ``(R,)`` round indices and the
+chunk reads no host data at all.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+PyTree = Any
+
+
+def make_round_chunk(round_fn: Callable, r: Optional[int], *,
+                     sample_fn: Optional[Callable] = None,
+                     donate: bool = True) -> Callable:
+    """Fuse ``r`` rounds of ``round_fn`` into one jitted ``lax.scan``.
+
+    ``r=None`` builds a length-polymorphic chunk: the scan length follows
+    the stacked inputs' leading dim (one jit specialization per distinct
+    length — used by the pod trainer's tail chunk).
+
+    Returns ``chunk_fn(state, batches, k_steps, weights, lam) ->
+    (state, metrics)`` where every input is stacked per round:
+
+    * ``batches`` — pytree with leading ``(r, M, k_max, …)`` (host-stacked
+      rounds, e.g. ``FederatedBatcher.chunk_batches``); with ``sample_fn``
+      it is instead the ``(r,)`` int32 round indices passed to
+      ``sample_fn(t)`` inside the scan.
+    * ``k_steps`` ``(r, M)`` int32, ``weights`` ``(r, M)`` f32,
+      ``lam`` ``(r,)`` f32 — per-round K_i schedules / client weights / λ.
+    * ``metrics`` — each entry a ``(r,)`` array (round-major).
+
+    ``state`` is donated by default: the carry buffers are reused across
+    chunk calls instead of reallocated (pass ``donate=False`` when the
+    caller must keep its input state alive).
+    """
+    def chunk_fn(state: PyTree, batches: PyTree, k_steps: jax.Array,
+                 weights: jax.Array, lam: jax.Array):
+        assert r is None or k_steps.shape[0] == r, (
+            f"chunk built for {r} rounds, got {k_steps.shape[0]}")
+
+        def body(st, xs):
+            b, k, w, l = xs
+            if sample_fn is not None:
+                b = sample_fn(b)
+            return round_fn(st, b, k, w, l)
+
+        return jax.lax.scan(body, state, (batches, k_steps, weights, lam))
+
+    return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())

@@ -4,7 +4,21 @@ tensors that the round engine (core/rounds.py) scans over.
 Each client re-samples with replacement from its own partition — clients own
 disjoint index sets, so the per-round tensor is fully determined by (round,
 seed) and regenerable on any host (important for the SPMD path, where each
-data slice materializes only its own clients' rows)."""
+data slice materializes only its own clients' rows).
+
+Two sampler families (DESIGN.md §9):
+
+* **Host batchers** (`FederatedBatcher`, `LMFederatedBatcher`) draw numpy
+  indices on host and transfer the gathered rows each round — the
+  pinned-equivalence compat mode (``sampler="host"``).
+* **`DeviceBatcher`** keeps the dataset resident on device and draws
+  per-``(seed, round, client)`` indices with ``jax.random`` *inside* the
+  jitted round chunk (core/engine.py) — no per-round host gather or
+  transfer.  Client *i*'s key is ``fold_in(fold_in(key(seed), t), i)``, so
+  row *i* of wave *t* is identical whether the full wave is materialized
+  (synchronous engine) or a single row (the async engine's per-dispatch
+  gather).
+"""
 from __future__ import annotations
 
 from typing import Callable, Optional
@@ -29,15 +43,33 @@ class FederatedBatcher:
         n_total = sum(len(p) for p in parts)
         self.weights = jnp.array([len(p) / n_total for p in parts],
                                  jnp.float32)
+        # full-dataset views cached ONCE: re-converting device arrays to
+        # numpy inside round_batches copied the whole dataset every round
+        self._x = np.asarray(data.x)
+        self._y = np.asarray(data.y)
+
+    def round_indices(self, t: int, k_max: int) -> np.ndarray:
+        """(M, k_max, B) dataset row indices for round ``t``."""
+        rng = np.random.default_rng((self.seed, t))
+        return np.stack([
+            part[rng.integers(0, len(part), (k_max, self.batch_size))]
+            for part in self.parts])
 
     def round_batches(self, t: int, k_max: int) -> dict:
         """(M, k_max, B, …) feature/label tensors for round ``t``."""
-        rng = np.random.default_rng((self.seed, t))
-        idx = np.stack([
-            part[rng.integers(0, len(part), (k_max, self.batch_size))]
-            for part in self.parts])                       # (M, k_max, B)
-        return {"x": jnp.asarray(np.asarray(self.data.x)[idx]),
-                "y": jnp.asarray(np.asarray(self.data.y)[idx])}
+        idx = self.round_indices(t, k_max)
+        return {"x": jnp.asarray(self._x[idx]),
+                "y": jnp.asarray(self._y[idx])}
+
+    def chunk_batches(self, t0: int, r: int, k_max: int) -> dict:
+        """(R, M, k_max, B, …) stacked rounds ``t0 … t0+r-1`` — one gather
+        and one host→device transfer per chunk instead of one per round.
+        Round ``t``'s slice is bit-identical to ``round_batches(t, k_max)``.
+        """
+        idx = np.stack([self.round_indices(t0 + j, k_max)
+                        for j in range(r)])
+        return {"x": jnp.asarray(self._x[idx]),
+                "y": jnp.asarray(self._y[idx])}
 
 
 class LMFederatedBatcher:
@@ -51,17 +83,78 @@ class LMFederatedBatcher:
         n_total = sum(s["tokens"].shape[0] for s in streams)
         self.weights = jnp.array(
             [s["tokens"].shape[0] / n_total for s in streams], jnp.float32)
+        # stream arrays cached once (previously re-converted per round)
+        self._toks = [np.asarray(s["tokens"]) for s in streams]
+        self._labs = [np.asarray(s["labels"]) for s in streams]
 
     def round_batches(self, t: int, k_max: int) -> dict:
         rng = np.random.default_rng((self.seed, t))
         toks, labs = [], []
-        for s in self.streams:
-            n = s["tokens"].shape[0]
-            idx = rng.integers(0, n, (k_max, self.batch_size))
-            toks.append(np.asarray(s["tokens"])[idx])
-            labs.append(np.asarray(s["labels"])[idx])
+        for tok, lab in zip(self._toks, self._labs):
+            idx = rng.integers(0, tok.shape[0], (k_max, self.batch_size))
+            toks.append(tok[idx])
+            labs.append(lab[idx])
         return {"tokens": jnp.asarray(np.stack(toks)),
                 "labels": jnp.asarray(np.stack(labs))}
+
+
+class DeviceBatcher:
+    """Device-resident deterministic sampler (DESIGN.md §9).
+
+    The dataset and the (padded) per-client index table live on device;
+    ``sample(t, k_max)`` is traceable and runs *inside* the jitted round
+    chunk, so a chunked run performs zero per-round host work.  Sampling is
+    with replacement from each client's partition, deterministic in
+    ``(seed, round, client)`` — NOT bit-matched to the numpy host batcher
+    (different RNG), which remains the golden-pinned compat mode.
+    """
+
+    def __init__(self, data: Dataset, parts: list[np.ndarray],
+                 batch_size: int, seed: int = 0):
+        self.data = data
+        self.parts = parts
+        self.m = len(parts)
+        self.batch_size = batch_size
+        self.seed = seed
+        sizes = np.array([len(p) for p in parts], np.int64)
+        n_total = int(sizes.sum())
+        self.weights = jnp.asarray(sizes / n_total, jnp.float32)
+        # rectangular (M, L) index table; the pad slots are never drawn
+        # because idx < sizes[i] by construction
+        padded = np.zeros((self.m, int(sizes.max())), np.int32)
+        for i, p in enumerate(parts):
+            padded[i, :len(p)] = p
+        self._table = jnp.asarray(padded)
+        self._sizes = jnp.asarray(sizes, jnp.int32)
+        self._x = jnp.asarray(data.x)
+        self._y = jnp.asarray(data.y)
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- traceable samplers (round index / client id may be traced ints) ----
+
+    def row_indices(self, t, i, k_max: int) -> jax.Array:
+        """(k_max, B) dataset rows for client ``i``'s round-``t`` draw."""
+        key = jax.random.fold_in(jax.random.fold_in(self._key, t), i)
+        u = jax.random.randint(key, (k_max, self.batch_size), 0,
+                               self._sizes[i])
+        return self._table[i, u]
+
+    def sample_row(self, t, i, k_max: int) -> dict:
+        """One client's (k_max, B, …) microbatches — the async engine's
+        per-dispatch gather (wave ``t``, client ``i``)."""
+        idx = self.row_indices(t, i, k_max)
+        return {"x": self._x[idx], "y": self._y[idx]}
+
+    def sample(self, t, k_max: int) -> dict:
+        """Full (M, k_max, B, …) wave for round ``t`` — the synchronous
+        engine's in-scan sampler; row ``i`` equals ``sample_row(t, i)``."""
+        return jax.vmap(lambda i: self.sample_row(t, i, k_max))(
+            jnp.arange(self.m))
+
+    # -- host-compatible API (eager; used by the chunk_rounds=1 path) -------
+
+    def round_batches(self, t: int, k_max: int) -> dict:
+        return self.sample(jnp.int32(t), k_max)
 
 
 def eval_metric(metric_fn: Callable, params, data: Dataset,

@@ -1,8 +1,9 @@
 from repro.fed.async_engine import BufferedAsyncSimulation, staleness_weight
-from repro.fed.clock import ClientClock, make_clock
+from repro.fed.clock import (ClientClock, Timeline, make_clock,
+                             simulate_timeline)
 from repro.fed.simulation import (FederatedSimulation, History,
                                   compare_algorithms)
 
 __all__ = ["FederatedSimulation", "History", "compare_algorithms",
            "BufferedAsyncSimulation", "staleness_weight", "ClientClock",
-           "make_clock"]
+           "Timeline", "make_clock", "simulate_timeline"]

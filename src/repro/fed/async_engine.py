@@ -1,4 +1,4 @@
-"""Buffered semi-asynchronous federated execution (DESIGN.md §5).
+"""Buffered semi-asynchronous federated execution (DESIGN.md §5, §9).
 
 The synchronous engine (fed/simulation.py) advances in lock-step rounds —
 the straggler defines the round clock.  This engine drops the barrier:
@@ -26,11 +26,23 @@ variants, and orientation recovers ν̄⁽ⁱ⁾ against the same stale anchor.
 With buffer = M, identical client speeds and zero staleness, every quantity
 above reduces to the synchronous round — FedaGrac-vs-FedAsync-vs-FedBuff is
 one config switch (``FedConfig.buffer_size`` / ``staleness``).
+
+Execution is device-resident (DESIGN.md §9).  The event ordering is
+deterministic given ``(k_schedule, clock, buffer_size)``, so the whole
+heapq simulation is precomputed by ``fed/clock.py::simulate_timeline`` into
+numpy arrays; ``run`` then executes updates in scanned chunks.  Stale
+anchors come from a bounded device-resident **anchor buffer** of M + 1
+model versions — one row per client (its dispatch-time ``(params, ν)``,
+rewritten at each re-dispatch) plus a scratch row that absorbs the masked
+writes of duplicate same-buffer reporters — replacing the host-side
+version→pytree dict.  Reports dispatched *within* the update that consumes
+them (duplicate reporters, version == update index) read the live model
+instead of the buffer.
 """
 from __future__ import annotations
 
-import heapq
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -42,7 +54,8 @@ from repro.core import rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.core.tree_util import tree_wsum
 from repro.data.partition import gaussian_k_schedule
-from repro.fed.clock import ClientClock, make_clock
+from repro.fed.clock import ClientClock, Timeline, make_clock, \
+    simulate_timeline
 from repro.fed.simulation import History
 
 PyTree = Any
@@ -69,6 +82,10 @@ class BufferedAsyncSimulation:
     ``fed.speed_dist`` wall-clock model; ``k_schedule`` rows index per-client
     *dispatches* (client *i*'s d-th task uses row d), so with buffer = M and
     identical speeds the data stream matches the synchronous engine's.
+
+    Each ``run`` call simulates a fresh timeline from the CURRENT model
+    (every client re-dispatched at simulated t = 0 on version 0, anchors
+    reset to the current state).
     """
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
@@ -99,35 +116,94 @@ class BufferedAsyncSimulation:
         self.weights = (np.asarray(batcher.weights)
                         if fed.weights == "data"
                         else np.full((m,), 1.0 / m, np.float32))
+        # private copy: the scanned chunk donates its carry (state + anchor
+        # buffers), which would delete a caller-owned params tree
+        params = jax.tree.map(jnp.array, params)
         self.state = rounds.init_state(params, m, self.algo)
         self.version = 0
-        # model-version history for stale anchors: version -> (params, nu);
-        # pruned to the oldest version still referenced by an in-flight task
-        self._hist = {0: (self.state["params"], self.state.get("nu"))}
-        self._batch_cache: dict[int, PyTree] = {}
-        self._step = jax.jit(self._make_step(loss_fn))
+        self._device_sampler = callable(getattr(batcher, "sample_row", None))
+        self._loss_fn = loss_fn
+        self._chunk: Optional[Callable] = None
+        self._anchors: Optional[PyTree] = None
+        self._nu_anchors: Optional[PyTree] = None
+        # host-sampler wave cache: per-wave index tensors, dropped after
+        # their last in-timeline consumer and LRU-capped at M + 1 waves —
+        # under heavy speed skew a straggler's wave can be re-requested
+        # thousands of updates after the fast clients consumed it, and an
+        # unbounded first-to-last-consumer residency would grow O(horizon);
+        # an evicted wave is simply regenerated (the pre-refactor engine
+        # made the same bounded-memory-for-regeneration trade)
+        self._wave_cache: dict[int, Any] = {}
+        self._wave_left: Optional[np.ndarray] = None
 
-    # -- the jitted buffered update (one trace: buffer size is static) ------
+    # -- device-resident anchor buffer --------------------------------------
 
-    def _make_step(self, loss_fn):
+    def _reset_anchors(self) -> None:
+        """(M+1)-row anchor buffer: rows 0…M-1 hold each client's
+        dispatch-time (params, ν); row M is the duplicate-write scratch."""
+        rows = self.clock.m + 1
+        self._anchors = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (rows,) + p.shape),
+            self.state["params"])
+        self._nu_anchors = (jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (rows,) + p.shape),
+            self.state["nu"]) if self.algo.uses_nu else jnp.zeros(()))
+
+    # -- the jitted scanned chunk (one trace per chunk length) --------------
+
+    def _chunk_fn(self) -> Callable:
+        """One jitted chunk serves every chunk length (jit re-specializes
+        on the stacked leading dim; equal-length chunks reuse the trace)."""
+        if self._chunk is None:
+            self._chunk = self._make_chunk()
+        return self._chunk
+
+    def _make_chunk(self):
         algo, lr, buffer = self.algo, self.fed.lr, self.buffer
+        uses_nu = algo.uses_nu
+        device = self._device_sampler
+        batcher, k_max = self.batcher, self.k_max
         client_update = stages.make_client_update(
-            loss_fn, algo, lr=lr, k_max=self.k_max, per_client_anchor=True)
+            self._loss_fn, algo, lr=lr, k_max=k_max, per_client_anchor=True)
         aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
 
-        def step(state, anchor_i, nu_anchor, batches, k_steps, sw, idx, lam):
+        def body(carry, xs):
+            state, A, N = carry
+            ids, k_steps, sw = xs["ids"], xs["k"], xs["sw"]
+            cur, fresh, wids = xs["cur"], xs["fresh"], xs["write_ids"]
+            lam = xs["lam"]
             params = state["params"]
+
+            def gather(buf, current):
+                # dispatch-time anchors; reports dispatched within THIS
+                # update (cur: version == update index) read the live model
+                return jax.tree.map(
+                    lambda b, c: jnp.where(
+                        cur.reshape((buffer,) + (1,) * c.ndim),
+                        jnp.broadcast_to(c[None], (buffer,) + c.shape),
+                        b[ids]),
+                    buf, current)
+
+            anchor_i = gather(A, params)
+            if device:
+                batches = jax.vmap(
+                    lambda d, i: batcher.sample_row(d, i, k_max))(
+                        xs["waves"], ids)
+            else:
+                batches = xs["batches"]
+
             kf = k_steps.astype(jnp.float32)
             # Σ w̃ — usually in (0, 1], but a high-weight fast client
             # reporting twice into one buffer can push it past 1
             mass = jnp.sum(sw)
             kbar = jnp.dot(sw, kf) / mass            # buffer-local K̄
 
-            if algo.uses_nu:
+            if uses_nu:
                 # correction each client ran with: c⁽ⁱ⁾ = ν_{v_i} − ν⁽ⁱ⁾
                 # (ν⁽ⁱ⁾ rows change only when client i itself reports, so the
                 # current row still holds the dispatch-time value)
-                c_b = jax.tree.map(lambda na, nui: na - nui[idx],
+                nu_anchor = gather(N, state["nu"])
+                c_b = jax.tree.map(lambda na, nui: na - nui[ids],
                                    nu_anchor, state["nu_i"])
             else:
                 c_b = stages.zero_corrections(params, buffer)
@@ -142,7 +218,7 @@ class BufferedAsyncSimulation:
             new_state["params"] = new_params
             new_state["round"] = state["round"] + 1
 
-            if algo.uses_nu:
+            if uses_nu:
                 transmit, avg_g = stages.orientation_transmit(
                     algo, params, x_b, g0_b, acc_b, c_b, kf, kbar, lr, lam,
                     anchor_i=anchor_i)
@@ -161,151 +237,161 @@ class BufferedAsyncSimulation:
                 # buffer) resolves arbitrarily between its two same-buffer
                 # reports — both are current to within one update
                 new_state["nu_i"] = jax.tree.map(
-                    lambda nui, g: nui.at[idx].set(g.astype(nui.dtype)),
+                    lambda nui, g: nui.at[ids].set(g.astype(nui.dtype)),
                     state["nu_i"], avg_g)
+
+            def scatter(buf, old, new):
+                # re-dispatch anchors: the pre-update model, or the
+                # post-update one for tie-upgraded reporters; a duplicate
+                # reporter writes once (its stale non-last occurrences are
+                # routed to the scratch row M by ``write_ids``)
+                return jax.tree.map(
+                    lambda b, o, n: b.at[wids].set(
+                        jnp.where(fresh.reshape((buffer,) + (1,) * o.ndim),
+                                  jnp.broadcast_to(n[None],
+                                                   (buffer,) + n.shape),
+                                  jnp.broadcast_to(o[None],
+                                                   (buffer,) + o.shape)
+                                  ).astype(b.dtype)),
+                    buf, old, new)
+
+            A = scatter(A, params, new_params)
+            if uses_nu:
+                N = scatter(N, state["nu"], new_state["nu"])
 
             metrics = {"loss": jnp.dot(sw, loss0) / mass, "kbar": kbar,
                        "mass": mass}
-            return new_state, metrics
+            return (new_state, A, N), metrics
 
-        return step
+        def chunk(carry, xs):
+            return jax.lax.scan(body, carry, xs)
 
-    # -- host-side event loop ------------------------------------------------
+        return jax.jit(chunk, donate_argnums=(0,))
 
-    def _client_batch(self, client: int, d: int, future_readers) -> PyTree:
-        """Row ``client`` of the d-th dispatch wave.
+    # -- host-sampler batch assembly ----------------------------------------
 
-        ``round_batches`` generates the full (M, …) wave; rows for the other
-        clients still in flight on wave d (``future_readers``) are cached so
-        the wave is generated once, and every entry is consumed exactly once
-        at its owner's arrival — cache size stays ≤ #in-flight tasks."""
-        row = self._batch_cache.pop((d, client), None)
-        if row is None:
-            wave = self.batcher.round_batches(d, self.k_max)
-            for j in future_readers:
-                if j != client and (d, j) not in self._batch_cache:
-                    self._batch_cache[(d, j)] = jax.tree.map(
-                        lambda a: a[j], wave)
-            row = jax.tree.map(lambda a: a[client], wave)
-        return row
+    def _wave(self, d: int):
+        """Index tensor (or full batch wave) ``d``, cached until its last
+        consumer in the precomputed timeline has arrived (LRU-capped,
+        see __init__)."""
+        wave = self._wave_cache.pop(d, None)
+        if wave is None:
+            if hasattr(self.batcher, "round_indices"):
+                wave = self.batcher.round_indices(d, self.k_max)
+            else:
+                wave = self.batcher.round_batches(d, self.k_max)
+        self._wave_left[d] -= 1
+        if self._wave_left[d] > 0:
+            self._wave_cache[d] = wave        # re-insert: most recent
+            while len(self._wave_cache) > self.clock.m + 1:
+                self._wave_cache.pop(next(iter(self._wave_cache)))
+        return wave
+
+    def _host_batches(self, tl: Timeline, u0: int, r: int) -> PyTree:
+        """(R, B, k_max, batch, …) gathered rows for updates u0 … u0+r-1 —
+        one host→device transfer per chunk."""
+        if hasattr(self.batcher, "round_indices"):
+            idx = np.empty((r, self.buffer, self.k_max,
+                            self.batcher.batch_size), np.int64)
+            for a in range(r):
+                for j in range(self.buffer):
+                    idx[a, j] = self._wave(int(tl.waves[u0 + a, j]))[
+                        int(tl.ids[u0 + a, j])]
+            return {"x": jnp.asarray(self.batcher._x[idx]),
+                    "y": jnp.asarray(self.batcher._y[idx])}
+        rows = [jax.tree.map(
+            lambda x, i=int(tl.ids[u0 + a, j]): x[i],
+            self._wave(int(tl.waves[u0 + a, j])))
+            for a in range(r) for j in range(self.buffer)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        return jax.tree.map(
+            lambda x: x.reshape((r, self.buffer) + x.shape[1:]), stacked)
+
+    # -- the timeline-driven chunked executor --------------------------------
 
     def run(self, t_updates: int, eval_every: int = 1,
-            verbose: bool = False) -> History:
+            verbose: bool = False,
+            chunk_updates: Optional[int] = None) -> History:
         hist = History()
-        m = self.clock.m
         fed = self.fed
-        heap: list[tuple[float, int, int]] = []
-        # i -> (ver, K, wave, t_dispatch)
-        inflight: dict[int, tuple[int, int, int, float]] = {}
-        waves = np.zeros(m, np.int64)
-        seq = 0
+        tl = simulate_timeline(self.k_schedule, self.clock, self.buffer,
+                               t_updates)
+        tau = tl.staleness
+        s = staleness_weight(tau, fed.staleness, fed.staleness_a,
+                             fed.staleness_b)
+        sw_all = (self.weights[tl.ids] * s).astype(np.float32)
+        cur_all = tl.versions == np.arange(t_updates)[:, None]
+        # duplicate reporters: only the LAST occurrence re-writes the
+        # client's anchor row; earlier ones land in the scratch row M
+        write_ids = tl.ids.copy()
+        for u in range(t_updates):
+            seen: set[int] = set()
+            for j in range(self.buffer - 1, -1, -1):
+                i = int(tl.ids[u, j])
+                if i in seen:
+                    write_ids[u, j] = self.clock.m
+                else:
+                    seen.add(i)
+        lam_all = np.asarray(
+            [float(self.lam_schedule(u)) if self.lam_schedule
+             else self.algo.lam for u in range(t_updates)], np.float32)
+        self._reset_anchors()
+        if not self._device_sampler:
+            self._wave_cache = {}
+            self._wave_left = np.bincount(tl.waves.ravel())
 
-        def dispatch(i: int, t_now: float, version: int) -> None:
-            nonlocal seq
-            d = int(waves[i])
-            k = int(self.k_schedule[d % len(self.k_schedule), i])
-            inflight[i] = (version, k, d, t_now)
-            waves[i] += 1
-            heapq.heappush(heap, (t_now + self.clock.duration(i, k), seq, i))
-            seq += 1
-
-        for i in range(m):
-            dispatch(i, 0.0, 0)
-
-        for upd in range(t_updates):
-            # Event-accurate fill: pop one report at a time and re-dispatch
-            # its client IMMEDIATELY on the current (pre-update) model — the
-            # server only steps when the buffer fills, so a fast client's
-            # next report can land inside this same buffer (as in FedBuff,
-            # where 'M' reports' counts reports, not distinct clients).
-            pending: list[tuple[float, int, tuple]] = []
-            while len(pending) < self.buffer:
-                t_arr, _, i = heapq.heappop(heap)
-                pending.append((t_arr, i, inflight.pop(i)))
-                dispatch(i, t_arr, self.version)
-            now = pending[-1][0]
-            ids = [p[1] for p in pending]
-            vs, ks, ds, _ = zip(*(p[2] for p in pending))
-
-            tau = self.version - np.asarray(vs)
-            s = staleness_weight(tau, fed.staleness, fed.staleness_a,
-                                 fed.staleness_b)
-            sw = jnp.asarray(self.weights[ids] * s, jnp.float32)
-
-            if len(set(vs)) == 1:
-                # common low-staleness regime (and the buffer = M sanity
-                # path): one shared anchor broadcast, not B stacked copies
-                anchors = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a[None],
-                                               (len(vs),) + a.shape),
-                    self._hist[vs[0]][0])
+        chunk = max(int(chunk_updates if chunk_updates is not None
+                        else eval_every), 1)
+        if (chunk_updates is not None and chunk > eval_every
+                and self.eval_fn is not None):
+            warnings.warn(
+                f"chunk_updates={chunk_updates} is clamped to the eval "
+                f"cadence (eval_every={eval_every}): the host must sync at "
+                f"every eval boundary", stacklevel=2)
+        u = 0
+        while u < t_updates:
+            r = min(chunk, t_updates - u)
+            if self.eval_fn is not None:
+                r = min(r, eval_every - u % eval_every)
+            sl = slice(u, u + r)
+            xs = {"ids": jnp.asarray(tl.ids[sl], jnp.int32),
+                  "k": jnp.asarray(tl.k_steps[sl], jnp.int32),
+                  "sw": jnp.asarray(sw_all[sl]),
+                  "cur": jnp.asarray(cur_all[sl]),
+                  "fresh": jnp.asarray(tl.fresh[sl]),
+                  "write_ids": jnp.asarray(write_ids[sl], jnp.int32),
+                  "lam": jnp.asarray(lam_all[sl])}
+            if self._device_sampler:
+                xs["waves"] = jnp.asarray(tl.waves[sl], jnp.int32)
             else:
-                anchors = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                       *(self._hist[v][0] for v in vs))
-            if not self.algo.uses_nu:
-                nu_anchor = jnp.zeros(())
-            elif len(set(vs)) == 1:
-                nu_anchor = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a[None],
-                                               (len(vs),) + a.shape),
-                    self._hist[vs[0]][1])
-            else:
-                nu_anchor = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                         *(self._hist[v][1] for v in vs))
-            readers: dict[int, set[int]] = {}
-            for j, (_, _, dj, _) in inflight.items():
-                readers.setdefault(dj, set()).add(j)
-            for j, dj in zip(ids, ds):
-                readers.setdefault(dj, set()).add(j)
-            batches = jax.tree.map(
-                lambda *xs: jnp.stack(xs),
-                *(self._client_batch(i, d, readers[d])
-                  for i, d in zip(ids, ds)))
-
-            lam = (float(self.lam_schedule(self.version))
-                   if self.lam_schedule else self.algo.lam)
-            t0 = time.perf_counter()
-            self.state, metrics = self._step(
-                self.state, anchors, nu_anchor, batches,
-                jnp.asarray(ks, jnp.int32), sw,
-                jnp.asarray(ids, jnp.int32), jnp.float32(lam))
-            pre_version = self.version
-            self.version += 1
-            self._hist[self.version] = (self.state["params"],
-                                        self.state.get("nu"))
-            # Tie upgrade: a client whose report landed at the very instant
-            # the buffer filled was re-dispatched and the server stepped at
-            # the same timestamp — it receives the FRESH model (zero elapsed
-            # time on its new task, so only the anchor version changes).
-            # With buffer = M and equal speeds every arrival ties at ``now``,
-            # preserving the exact synchronous reduction.
-            for t_arr, i, _ in pending:
-                if t_arr == now and i in inflight:
-                    ver, k, d, t_disp = inflight[i]
-                    if ver == pre_version and t_disp == t_arr:
-                        inflight[i] = (self.version, k, d, t_disp)
-
-            # prune model versions no in-flight task references — a
-            # straggler pins its old version while the head advances, so
-            # prune to the referenced SET (≤ M + 1 entries with the current
-            # version), not a low-water mark.  (The batch cache self-
-            # consumes: every entry is popped at its owner's arrival.)
-            live = {v for v, _, _, _ in inflight.values()} | {self.version}
-            for v in [v for v in self._hist if v not in live]:
-                del self._hist[v]
-
-            hist.loss.append(float(metrics["loss"]))
-            hist.kbar.append(float(metrics["kbar"]))
-            hist.wall.append(time.perf_counter() - t0)
-            hist.sim_time.append(now)
-            hist.staleness.append(float(tau.mean()))
-            if self.eval_fn is not None and (upd + 1) % eval_every == 0:
-                hist.metric.append(float(self.eval_fn(self.state["params"])))
-            if verbose and (upd % 10 == 0 or upd == t_updates - 1):
+                xs["batches"] = self._host_batches(tl, u, r)
+            fn = self._chunk_fn()
+            tic = time.perf_counter()
+            carry, metrics = fn((self.state, self._anchors,
+                                 self._nu_anchors), xs)
+            self.state, self._anchors, self._nu_anchors = carry
+            # timed region covers the compute, not the async dispatch
+            jax.block_until_ready(self.state)
+            dt = time.perf_counter() - tic
+            hist.loss.extend(np.asarray(metrics["loss"],
+                                        np.float64).tolist())
+            hist.kbar.extend(np.asarray(metrics["kbar"],
+                                        np.float64).tolist())
+            hist.mass.extend(np.asarray(metrics["mass"],
+                                        np.float64).tolist())
+            hist.wall.extend([dt / r] * r)
+            hist.sim_time.extend(tl.arrival_t[sl, -1].tolist())
+            hist.staleness.extend(tau[sl].mean(axis=1).tolist())
+            u += r
+            if self.eval_fn is not None and u % eval_every == 0:
+                hist.metric.append(float(self.eval_fn(
+                    self.state["params"])))
+            if verbose and (u % 10 < r or u == t_updates):
                 mtr = hist.metric[-1] if hist.metric else float("nan")
-                print(f"  update {upd:4d}  t={now:8.2f}  "
+                print(f"  update {u - 1:4d}  t={hist.sim_time[-1]:8.2f}  "
                       f"loss={hist.loss[-1]:.4f}  metric={mtr:.4f}  "
-                      f"stale={tau.mean():.1f}")
+                      f"stale={hist.staleness[-1]:.1f}")
+        self.version += t_updates
         return hist
 
     @property

@@ -10,10 +10,18 @@ stream of stale updates instead of aligned rounds (DESIGN.md §5).
 ``ClientClock`` maps (client, K_i) → simulated duration; the async engine
 orders report events with it.  Speeds are *steps per unit time*; a fixed
 per-report ``latency`` models the upload/download overhead.
+
+``simulate_timeline`` is the event loop itself: the buffered-async
+execution order is fully determined by ``(k_schedule, clock, buffer_size)``
+— no model state enters the arrival ordering — so the entire heapq
+simulation is precomputed here in one host pass and the engine
+(fed/async_engine.py) merely *executes* the resulting arrays in scanned
+chunks (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -37,6 +45,115 @@ class ClientClock:
         """Synchronous-round duration: the straggler defines the round."""
         k = np.broadcast_to(np.asarray(k_steps, np.float64), (self.m,))
         return float(np.max(k / self.speeds + self.latency))
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Precomputed buffered-async execution schedule for T server updates.
+
+    Row ``u`` describes update ``u``'s buffer of B reports in arrival order
+    (heap order: time, then dispatch sequence):
+
+    * ``ids``        (T, B) int — reporting client of each buffer slot.
+    * ``versions``   (T, B) int — model version the report was dispatched
+      with (tie-upgrade rule applied, so ∈ {dispatch update, +1}).
+    * ``waves``      (T, B) int — dispatch wave d: the report trained on row
+      ``ids`` of batch wave ``d`` and K = ``k_schedule[d % len, id]``.
+    * ``k_steps``    (T, B) int — that K, denormalized for convenience.
+    * ``staleness``  (T, B) int — τ = u − version.
+    * ``arrival_t``  (T, B) f64 — simulated arrival times; ``arrival_t[u,-1]``
+      is the server-update timestamp (``History.sim_time``).
+    * ``fresh``      (T, B) bool — the reporter's RE-dispatched task carries
+      the post-update model (the tie-upgrade rule fired), i.e. its next
+      anchor is the update's output rather than its input.
+    """
+    ids: np.ndarray
+    versions: np.ndarray
+    waves: np.ndarray
+    k_steps: np.ndarray
+    staleness: np.ndarray
+    arrival_t: np.ndarray
+    fresh: np.ndarray
+
+    @property
+    def t_updates(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def buffer(self) -> int:
+        return self.ids.shape[1]
+
+
+def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
+                      buffer: int, t_updates: int) -> Timeline:
+    """Run the FedBuff event loop for ``t_updates`` server updates.
+
+    Event-accurate semantics (identical to the engine's original in-line
+    loop, pinned by tests/test_async_engine.py): every popped report
+    re-dispatches its client IMMEDIATELY on the current (pre-update) model —
+    the server only steps when the buffer fills, so a fast client's next
+    report can land inside this same buffer ('M reports' counts reports,
+    not distinct clients).  A client whose report landed at the very
+    instant the buffer filled was re-dispatched and the server stepped at
+    the same timestamp — it receives the FRESH post-update model (zero
+    elapsed time on its new task, so only the anchor version changes).
+    With buffer = M and equal speeds every arrival ties, preserving the
+    exact synchronous reduction.
+    """
+    m = clock.m
+    k_schedule = np.asarray(k_schedule)
+    heap: list[tuple[float, int, int]] = []
+    # client -> (version, K, wave, t_dispatch)
+    inflight: dict[int, tuple[int, int, int, float]] = {}
+    wave_ctr = np.zeros(m, np.int64)
+    seq = 0
+
+    def dispatch(i: int, t_now: float, version: int) -> None:
+        nonlocal seq
+        d = int(wave_ctr[i])
+        k = int(k_schedule[d % len(k_schedule), i])
+        inflight[i] = (version, k, d, t_now)
+        wave_ctr[i] += 1
+        heapq.heappush(heap, (t_now + clock.duration(i, k), seq, i))
+        seq += 1
+
+    for i in range(m):
+        dispatch(i, 0.0, 0)
+
+    shape = (t_updates, buffer)
+    ids = np.zeros(shape, np.int64)
+    versions = np.zeros(shape, np.int64)
+    waves = np.zeros(shape, np.int64)
+    k_steps = np.zeros(shape, np.int64)
+    arrival_t = np.zeros(shape, np.float64)
+    fresh = np.zeros(shape, bool)
+
+    for u in range(t_updates):
+        pending: list[tuple[float, int, tuple]] = []
+        while len(pending) < buffer:
+            t_arr, _, i = heapq.heappop(heap)
+            pending.append((t_arr, i, inflight.pop(i)))
+            dispatch(i, t_arr, u)
+        now = pending[-1][0]
+        for j, (t_arr, i, (v, k, d, _)) in enumerate(pending):
+            ids[u, j] = i
+            versions[u, j] = v
+            waves[u, j] = d
+            k_steps[u, j] = k
+            arrival_t[u, j] = t_arr
+        # tie upgrade (see docstring); idempotent for duplicate reporters —
+        # the check always lands on the client's NEWEST in-flight task
+        for t_arr, i, _ in pending:
+            if t_arr == now and i in inflight:
+                ver, k, d, t_disp = inflight[i]
+                if ver == u and t_disp == t_arr:
+                    inflight[i] = (u + 1, k, d, t_disp)
+        fresh[u] = [inflight[i][0] == u + 1 for i in ids[u]]
+
+    staleness = np.arange(t_updates, dtype=np.int64)[:, None] - versions
+    return Timeline(ids=ids, versions=versions, waves=waves,
+                    k_steps=k_steps, staleness=staleness,
+                    arrival_t=arrival_t, fresh=fresh)
 
 
 def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,

@@ -3,11 +3,22 @@
 Drives the SPMD round engine (core/rounds.py) with vmap-over-clients on one
 device: samples K_i schedules, assembles per-round microbatches, runs T
 rounds jitted, and records loss / eval metrics.  This is the harness behind
-the paper-experiment benchmarks (Tables 1/2/6, Figures 2/3/5)."""
+the paper-experiment benchmarks (Tables 1/2/6, Figures 2/3/5).
+
+Execution is chunked (DESIGN.md §9): ``run`` drives blocks of
+``chunk_rounds`` rounds through one jitted ``lax.scan``
+(core/engine.py), syncing to host only at chunk boundaries — the eval
+cadence defines the default chunk size, so the legacy behavior
+(``eval_every=1`` ⇒ one dispatch + one sync per round) is the
+``chunk_rounds=1`` compat path, bit-identical by construction and pinned by
+tests/test_golden_equivalence.py.  With a ``DeviceBatcher`` the per-round
+microbatches are also drawn inside the scan; host batchers stack R rounds
+into a single transfer."""
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -15,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import rounds
+from repro.core import engine, rounds
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
 
@@ -30,9 +41,11 @@ class History:
     wall: list[float] = dataclasses.field(default_factory=list)
     per_client: list[list[float]] = dataclasses.field(default_factory=list)
     # buffered-async engine (fed/async_engine.py): simulated arrival time of
-    # each server update and the mean staleness of its buffer
+    # each server update, the mean staleness of its buffer, and the buffer
+    # mass Σ w̃ (discount-weighted participation)
     sim_time: list[float] = dataclasses.field(default_factory=list)
     staleness: list[float] = dataclasses.field(default_factory=list)
+    mass: list[float] = dataclasses.field(default_factory=list)
 
     def fairness(self) -> Optional[dict]:
         """FL fairness of the final round: worst-client metric and the
@@ -78,9 +91,17 @@ class FederatedSimulation:
                         if fed.weights == "data"
                         else jnp.full((fed.n_clients,),
                                       1.0 / fed.n_clients, jnp.float32))
+        # private copy: chunked execution donates the state buffers to the
+        # scan (core/engine.py), which would delete a caller-owned ``params``
+        # tree shared with other simulations
+        params = jax.tree.map(jnp.array, params)
         self.state = rounds.init_state(params, fed.n_clients, self.algo)
         self._round: Optional[Callable] = None
+        self._chunks: dict[int, Callable] = {}
         self._loss_fn = loss_fn
+        # a DeviceBatcher exposes a traceable in-scan sampler; host batchers
+        # remain the pinned-equivalence compat mode (DESIGN.md §9)
+        self._device_sampler = callable(getattr(batcher, "sample", None))
 
     def _round_fn(self) -> Callable:
         """One jitted round for EVERY λ: the round function takes λ as a
@@ -93,32 +114,109 @@ class FederatedSimulation:
             self._round = jax.jit(fn)
         return self._round
 
+    def _chunk_fn(self, r: int) -> Callable:
+        """The r-round scanned chunk (cached per chunk length)."""
+        if r not in self._chunks:
+            fn = rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
+                                   k_max=self.k_max)
+            sample = (lambda t: self.batcher.sample(t, self.k_max)) \
+                if self._device_sampler else None
+            self._chunks[r] = engine.make_round_chunk(fn, r,
+                                                      sample_fn=sample)
+        return self._chunks[r]
+
+    def _lam(self, t: int) -> float:
+        return (float(self.lam_schedule(t)) if self.lam_schedule
+                else self.algo.lam)
+
+    def _chunk_inputs(self, t0: int, r: int):
+        """Stacked (k_steps, weights, lam) + batches for rounds t0…t0+r-1."""
+        L = len(self.k_schedule)
+        ks = jnp.asarray(np.stack(
+            [np.asarray(self.k_schedule[(t0 + j) % L]) for j in range(r)]
+        ).astype(np.int32))
+        lams = jnp.asarray([self._lam(t0 + j) for j in range(r)],
+                           jnp.float32)
+        weights = jnp.broadcast_to(self.weights, (r,) + self.weights.shape)
+        if self._device_sampler:
+            batches = jnp.arange(t0, t0 + r, dtype=jnp.int32)
+        elif hasattr(self.batcher, "chunk_batches"):
+            batches = self.batcher.chunk_batches(t0, r, self.k_max)
+        else:
+            waves = [self.batcher.round_batches(t0 + j, self.k_max)
+                     for j in range(r)]
+            batches = jax.tree.map(lambda *xs: jnp.stack(xs), *waves)
+        return batches, ks, weights, lams
+
+    def _run_round(self, t: int, hist: History) -> None:
+        """The chunk_rounds=1 compat path: one dispatch + one host sync per
+        round, bit-identical to the pre-chunking loop (golden-pinned)."""
+        lam = self._lam(t)
+        round_fn = self._round_fn()
+        k_t = jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
+        batches = self.batcher.round_batches(t, self.k_max)
+        t0 = time.perf_counter()
+        self.state, metrics = round_fn(self.state, batches, k_t,
+                                       self.weights, jnp.float32(lam))
+        # the timed region must cover the COMPUTE, not the async dispatch:
+        # without the block, hist.wall under-reports by the entire round
+        jax.block_until_ready(self.state)
+        hist.wall.append(time.perf_counter() - t0)
+        hist.loss.append(float(metrics["loss"]))
+        hist.kbar.append(float(metrics["kbar"]))
+
+    def _run_chunk(self, t0: int, r: int, hist: History) -> None:
+        chunk_fn = self._chunk_fn(r)
+        batches, ks, weights, lams = self._chunk_inputs(t0, r)
+        tic = time.perf_counter()
+        self.state, metrics = chunk_fn(self.state, batches, ks, weights,
+                                       lams)
+        jax.block_until_ready(self.state)
+        dt = time.perf_counter() - tic
+        hist.loss.extend(np.asarray(metrics["loss"], np.float64).tolist())
+        hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
+        hist.wall.extend([dt / r] * r)
+
     def run(self, t_rounds: int, eval_every: int = 1,
-            verbose: bool = False) -> History:
+            verbose: bool = False,
+            chunk_rounds: Optional[int] = None) -> History:
+        """``chunk_rounds=None`` chunks at the eval cadence (``eval_every``);
+        ``1`` forces the per-round compat loop.  Eval hooks fire at the same
+        rounds regardless of chunking — chunks never cross an eval
+        boundary, so an explicit ``chunk_rounds`` larger than ``eval_every``
+        is clamped (raise ``eval_every`` to actually chunk)."""
+        chunk = max(int(chunk_rounds if chunk_rounds is not None
+                        else eval_every), 1)
+        if (chunk_rounds is not None and chunk > eval_every
+                and (self.eval_fn is not None
+                     or self.eval_per_client is not None)):
+            warnings.warn(
+                f"chunk_rounds={chunk_rounds} is clamped to the eval "
+                f"cadence (eval_every={eval_every}): the host must sync at "
+                f"every eval boundary", stacklevel=2)
         hist = History()
-        for t in range(t_rounds):
-            lam = (float(self.lam_schedule(t)) if self.lam_schedule
-                   else self.algo.lam)
-            round_fn = self._round_fn()
-            k_t = jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
-            batches = self.batcher.round_batches(t, self.k_max)
-            t0 = time.perf_counter()
-            self.state, metrics = round_fn(self.state, batches, k_t,
-                                           self.weights, jnp.float32(lam))
-            loss = float(metrics["loss"])
-            hist.loss.append(loss)
-            hist.kbar.append(float(metrics["kbar"]))
-            hist.wall.append(time.perf_counter() - t0)
-            if self.eval_fn is not None and (t + 1) % eval_every == 0:
-                hist.metric.append(float(self.eval_fn(self.state["params"])))
-            if self.eval_per_client is not None and \
-                    (t + 1) % eval_every == 0:
-                hist.per_client.append(
-                    [float(v) for v in
-                     self.eval_per_client(self.state["params"])])
-            if verbose and (t % 10 == 0 or t == t_rounds - 1):
+        t = 0
+        while t < t_rounds:
+            r = min(chunk, t_rounds - t)
+            if self.eval_fn is not None or self.eval_per_client is not None:
+                r = min(r, eval_every - t % eval_every)
+            if r == 1:
+                self._run_round(t, hist)
+            else:
+                self._run_chunk(t, r, hist)
+            t += r
+            if t % eval_every == 0:
+                if self.eval_fn is not None:
+                    hist.metric.append(float(self.eval_fn(
+                        self.state["params"])))
+                if self.eval_per_client is not None:
+                    hist.per_client.append(
+                        [float(v) for v in
+                         self.eval_per_client(self.state["params"])])
+            if verbose and (t % 10 < r or t == t_rounds):
                 m = hist.metric[-1] if hist.metric else float("nan")
-                print(f"  round {t:4d}  loss={loss:.4f}  metric={m:.4f}")
+                print(f"  round {t - 1:4d}  loss={hist.loss[-1]:.4f}  "
+                      f"metric={m:.4f}")
         return hist
 
     @property

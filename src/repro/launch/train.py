@@ -2,8 +2,12 @@
 
 ``build_train_round`` returns (round_fn, specs) where round_fn is the jit'd
 SPMD FedaGrac round: client axis = mesh data axes (one client per data
-slice), tensor parallelism over ``model``.  ``main`` runs a small number of
-real rounds on however many devices exist (the end-to-end example path).
+slice), tensor parallelism over ``model``.  With ``chunk_rounds > 1`` the
+returned function is instead the device-resident chunk (core/engine.py,
+DESIGN.md §9): R rounds fused into one ``lax.scan`` dispatch over stacked
+per-round inputs, shardings pinned by the in-scan ``param_constraint``
+rather than explicit jit shardings.  ``main`` runs a small number of real
+rounds on however many devices exist (the end-to-end example path).
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
-from repro.core import rounds
+from repro.core import engine, rounds
 from repro.core.fedopt import get_algorithm
 from repro.dist import set_mesh_rules, use_mesh
 from repro.launch import specs as specs_lib
@@ -48,8 +52,14 @@ def make_param_constraint(mesh):
 
 
 def build_train_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                      fed: FedConfig, *, k_max: int = 4):
-    """Returns (jitted_round_fn, spec_bundle).  Call under ``with mesh:``."""
+                      fed: FedConfig, *, k_max: int = 4,
+                      chunk_rounds: int = 1):
+    """Returns (jitted_round_fn, spec_bundle).  Call under ``with mesh:``.
+
+    ``chunk_rounds > 1`` returns the scanned R-round chunk instead —
+    ``chunk(state, batches, k_steps, weights, lam)`` with every input
+    stacked per round (leading ``(R,)``), one dispatch and one host sync
+    per chunk (DESIGN.md §9)."""
     algo = get_algorithm(fed.algorithm, fed)
     set_mesh_rules(mesh, mesh_rules(mesh, kind="train"))
 
@@ -60,6 +70,11 @@ def build_train_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
         param_constraint=make_param_constraint(mesh))
 
     bundle = specs_lib.train_specs(cfg, shape, mesh, algo, k_max=k_max)
+    if chunk_rounds > 1:
+        # sharding layouts are pinned by the in-scan param_constraint;
+        # stacked inputs keep their per-round specs on the trailing axes.
+        # Length-polymorphic: the final (shorter) tail chunk re-specializes
+        return engine.make_round_chunk(round_fn, None), bundle
     sh = lambda tree: specs_lib.to_shardings(tree, mesh)
     ps = bundle["pspecs"]
     jitted = jax.jit(
@@ -120,6 +135,9 @@ def main() -> None:
     ap.add_argument("--shape", choices=sorted(SHAPES), default="train_4k")
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--k-max", type=int, default=4)
+    ap.add_argument("--chunk-rounds", type=int, default=1,
+                    help="rounds fused into one lax.scan dispatch "
+                         "(core/engine.py; host syncs per chunk)")
     ap.add_argument("--algo", default="fedagrac")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced model + tiny shape (CPU/dev runs)")
@@ -137,8 +155,10 @@ def main() -> None:
     fed = FedConfig(algorithm=args.algo, lr=0.3 if args.reduced else 3e-2)
 
     with use_mesh(mesh):
+        chunk = max(args.chunk_rounds, 1)
         jitted, bundle = build_train_round(cfg, shape, mesh, fed,
-                                           k_max=args.k_max)
+                                           k_max=args.k_max,
+                                           chunk_rounds=chunk)
         m, b_local = bundle["m"], bundle["b_local"]
         from repro.core import rounds as rounds_lib
         from repro.models.model import init_params
@@ -151,22 +171,42 @@ def main() -> None:
         weights = jax.device_put(jnp.full((m,), 1.0 / m, jnp.float32),
                                  sh(ps["weights"]))
         key = jax.random.PRNGKey(1)
-        for t in range(args.rounds):
+
+        def round_inputs(t):
             data = lm_sequences(jax.random.fold_in(key, t),
                                 m * args.k_max * b_local, shape.seq_len,
                                 cfg.vocab)
             batches = jax.tree.map(
                 lambda a: jnp.reshape(a, (m, args.k_max, b_local, -1)), data)
-            batches = jax.device_put(batches, sh(ps["batches"]))
-            ks = jax.device_put(
-                jnp.clip(jax.random.poisson(jax.random.fold_in(key, 1000 + t),
-                                            3, (m,)) + 1, 1, args.k_max
-                         ).astype(jnp.int32), sh(ps["k_steps"]))
-            state, metrics = jitted(state, batches, ks, weights)
+            ks = jnp.clip(jax.random.poisson(jax.random.fold_in(key, 1000 + t),
+                                             3, (m,)) + 1, 1, args.k_max
+                          ).astype(jnp.int32)
+            return batches, ks
+
+        for t0 in range(0, args.rounds, chunk):
+            r = min(chunk, args.rounds - t0)      # tail chunk may be short
+            if chunk == 1:
+                batches, ks = round_inputs(t0)
+                state, metrics = jitted(
+                    state, jax.device_put(batches, sh(ps["batches"])),
+                    jax.device_put(ks, sh(ps["k_steps"])), weights)
+                losses = [float(metrics["loss"])]
+                kbars = [float(metrics["kbar"])]
+            else:
+                per_round = [round_inputs(t0 + j) for j in range(r)]
+                batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *(b for b, _ in per_round))
+                ks = jnp.stack([k for _, k in per_round])
+                state, metrics = jitted(
+                    state, batches, ks,
+                    jnp.broadcast_to(weights, (r, m)),
+                    jnp.full((r,), algo.lam, jnp.float32))
+                losses = [float(x) for x in metrics["loss"]]
+                kbars = [float(x) for x in metrics["kbar"]]
             if is_coordinator():
-                print(f"round {t + 1}/{args.rounds}  "
-                      f"loss {float(metrics['loss']):.4f}  "
-                      f"kbar {float(metrics['kbar']):.2f}", flush=True)
+                for j, (lo, kb) in enumerate(zip(losses, kbars)):
+                    print(f"round {t0 + j + 1}/{args.rounds}  "
+                          f"loss {lo:.4f}  kbar {kb:.2f}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Buffered semi-asynchronous engine (fed/async_engine.py + fed/clock.py)."""
 import dataclasses
+import heapq
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +10,9 @@ import pytest
 from repro.configs.base import FedConfig
 from repro.core import rounds, stages
 from repro.core.fedopt import get_algorithm
-from repro.data import FederatedBatcher, fedprox_synthetic
+from repro.data import DeviceBatcher, FederatedBatcher, fedprox_synthetic
 from repro.fed import (BufferedAsyncSimulation, FederatedSimulation,
-                       make_clock, staleness_weight)
+                       make_clock, simulate_timeline, staleness_weight)
 from repro.models.simple import lr_loss, quad_loss
 
 M = 8
@@ -203,7 +204,7 @@ def test_buffered_async_runs_and_tracks_staleness():
     assert max(h.staleness) > 0
 
 
-def test_history_pruning_bounds_memory():
+def test_anchor_buffer_bounds_memory():
     data, parts, params = _task()
     fed = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
                     buffer_size=2, speed_dist="lognormal", speed_sigma=1.5)
@@ -211,10 +212,15 @@ def test_history_pruning_bounds_memory():
         lr_loss, params, fed, FederatedBatcher(data, parts, batch_size=10),
         k_schedule=np.full((50, M), 4, np.int32))
     sim.run(20)
-    # version history holds only versions still referenced by in-flight
-    # tasks (≤ M distinct) — never all 20
-    assert len(sim._hist) <= M + 1
-    assert len(sim._batch_cache) <= M + 1
+    # the device-resident anchor buffer holds exactly M + 1 model versions
+    # (one dispatch-time row per client + the duplicate-write scratch row)
+    # regardless of how far a fast client races ahead of a straggler, and
+    # the host wave cache is consumed down by its precomputed counts
+    for leaf in jax.tree.leaves(sim._anchors):
+        assert leaf.shape[0] == M + 1
+    for leaf in jax.tree.leaves(sim._nu_anchors):
+        assert leaf.shape[0] == M + 1
+    assert len(sim._wave_cache) <= M + 1
 
 
 def test_staleness_discount_shrinks_the_update():
@@ -257,16 +263,8 @@ def test_duplicate_reporter_keeps_nu_mixing_convex():
         lr_loss, {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}, fed,
         FederatedBatcher(data, parts, batch_size=10),
         k_schedule=np.full((300, 3), 3, np.int32), clock=clock)
-    masses, orig = [], sim._step
-
-    def spy(*args):
-        state, metrics = orig(*args)
-        masses.append(float(metrics["mass"]))
-        return state, metrics
-
-    sim._step = spy
     h = sim.run(40)
-    assert max(masses) > 1.0, masses        # the Σw̃ > 1 regime really occurs
+    assert max(h.mass) > 1.0, h.mass        # the Σw̃ > 1 regime really occurs
     assert all(np.isfinite(h.loss))
     nu_norm = max(float(jnp.max(jnp.abs(v)))
                   for v in jax.tree.leaves(sim.state["nu"]))
@@ -279,3 +277,157 @@ def test_buffer_size_validation():
     with pytest.raises(ValueError):
         BufferedAsyncSimulation(lr_loss, params, fed,
                                 FederatedBatcher(data, parts, batch_size=10))
+
+
+# ---------------------------------------------------------------------------
+# precomputed timeline == the heapq event loop (golden, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _reference_event_loop(k_schedule, clock, buffer, t_updates):
+    """Frozen copy of the pre-refactor BufferedAsyncSimulation.run event
+    bookkeeping (heap fill, immediate re-dispatch, tie upgrade) — the
+    golden reference ``fed/clock.py::simulate_timeline`` must reproduce."""
+    m = clock.m
+    heap, inflight, seq = [], {}, 0
+    waves = np.zeros(m, np.int64)
+    version = 0
+    out = []
+
+    def dispatch(i, t_now, ver):
+        nonlocal seq
+        d = int(waves[i])
+        k = int(k_schedule[d % len(k_schedule), i])
+        inflight[i] = (ver, k, d, t_now)
+        waves[i] += 1
+        heapq.heappush(heap, (t_now + clock.duration(i, k), seq, i))
+        seq += 1
+
+    for i in range(m):
+        dispatch(i, 0.0, 0)
+    for _ in range(t_updates):
+        pending = []
+        while len(pending) < buffer:
+            t_arr, _, i = heapq.heappop(heap)
+            pending.append((t_arr, i, inflight.pop(i)))
+            dispatch(i, t_arr, version)
+        now = pending[-1][0]
+        ids = [p[1] for p in pending]
+        vs, ks, ds, _ = zip(*(p[2] for p in pending))
+        tau = version - np.asarray(vs)
+        pre_version = version
+        version += 1
+        for t_arr, i, _ in pending:
+            if t_arr == now and i in inflight:
+                ver, k, d, t_disp = inflight[i]
+                if ver == pre_version and t_disp == t_arr:
+                    inflight[i] = (version, k, d, t_disp)
+        out.append((ids, vs, ds, ks, tau,
+                    [p[0] for p in pending], now))
+    return out
+
+
+@pytest.mark.parametrize("dist,buffer", [("fixed", M), ("fixed", 3),
+                                         ("lognormal", 3), ("lognormal", 1),
+                                         ("bimodal", 2), ("bimodal", 5)])
+def test_timeline_matches_heapq_event_loop(dist, buffer):
+    """simulate_timeline reproduces the event loop exactly — same reporter
+    ids, dispatch versions (tie-upgrade rule included), waves, K_i,
+    staleness and arrival times per update — for all clock shapes."""
+    clock = make_clock(M, dist=dist, sigma=1.0, seed=7)
+    ks = np.arange(1, 1 + 60 * M).reshape(60, M) % 7 + 1
+    t = 37
+    tl = simulate_timeline(ks, clock, buffer, t)
+    ref = _reference_event_loop(ks, clock, buffer, t)
+    for u, (ids, vs, ds, kk, tau, t_arr, now) in enumerate(ref):
+        np.testing.assert_array_equal(tl.ids[u], ids, err_msg=f"u={u}")
+        np.testing.assert_array_equal(tl.versions[u], vs, err_msg=f"u={u}")
+        np.testing.assert_array_equal(tl.waves[u], ds, err_msg=f"u={u}")
+        np.testing.assert_array_equal(tl.k_steps[u], kk, err_msg=f"u={u}")
+        np.testing.assert_array_equal(tl.staleness[u], tau,
+                                      err_msg=f"u={u}")
+        np.testing.assert_array_equal(tl.arrival_t[u], t_arr,
+                                      err_msg=f"u={u}")
+        assert tl.arrival_t[u, -1] == now
+
+
+def test_timeline_full_buffer_is_synchronous():
+    """buffer = M + fixed speeds: every update is one aligned wave — zero
+    staleness, all clients once, and the tie-upgrade rule fires for all."""
+    clock = make_clock(M, dist="fixed")
+    tl = simulate_timeline(np.full((10, M), 4, np.int64), clock, M, 6)
+    assert np.all(tl.staleness == 0)
+    assert np.all(tl.fresh)
+    for u in range(6):
+        assert sorted(tl.ids[u]) == list(range(M))
+        assert np.all(tl.waves[u] == u)
+
+
+def test_timeline_fresh_matches_next_dispatch_version():
+    """fresh[u, j] is exactly 'the reporter's next report carries version
+    u + 1' — checked against each client's next appearance."""
+    clock = make_clock(M, dist="lognormal", sigma=1.0, seed=3)
+    ks = np.full((40, M), 4, np.int64)
+    tl = simulate_timeline(ks, clock, 3, 30)
+    for u in range(30):
+        for j in range(3):
+            i = tl.ids[u, j]
+            later = [(u2, j2) for u2 in range(u + 1, 30)
+                     for j2 in range(3)
+                     if tl.ids[u2, j2] == i and tl.waves[u2, j2] > tl.waves[u, j]]
+            if later:
+                u2, j2 = later[0]
+                assert tl.fresh[u, j] == (tl.versions[u2, j2] == u + 1)
+
+
+# ---------------------------------------------------------------------------
+# chunked execution and the device sampler
+# ---------------------------------------------------------------------------
+
+def test_chunked_async_matches_per_update():
+    """Scanned chunks sync to host only at boundaries; the trajectory must
+    match the per-update (chunk_updates=1) execution bit-for-bit — it is the
+    same scan body either way."""
+    data, parts, params = _task()
+    fed = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
+                    calibration_rate=0.5, buffer_size=3, staleness="hinge",
+                    speed_dist="lognormal", speed_sigma=1.0)
+    ks = np.full((50, M), 4, np.int32)
+    a = BufferedAsyncSimulation(
+        lr_loss, params, fed, FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=ks)
+    ha = a.run(12, chunk_updates=1)
+    b = BufferedAsyncSimulation(
+        lr_loss, params, fed, FederatedBatcher(data, parts, batch_size=10),
+        k_schedule=ks)
+    hb = b.run(12, chunk_updates=6)
+    assert ha.loss == hb.loss
+    assert ha.sim_time == hb.sim_time
+    assert ha.staleness == hb.staleness
+    for la, lb in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_async_device_sampler_full_buffer_reduces_to_sync():
+    """DeviceBatcher + buffer = M + fixed speeds: the async engine samples
+    row i of wave d inside the scan — identical draws to the synchronous
+    device-sampled engine, so the trajectories coincide."""
+    data, parts, params = _task()
+    ks = np.full((50, M), 4, np.int32)
+    fed_sync = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
+                         calibration_rate=0.5, weights="data")
+    sync = FederatedSimulation(
+        lr_loss, params, fed_sync, DeviceBatcher(data, parts, batch_size=10),
+        k_schedule=ks)
+    h_sync = sync.run(5)
+    fed_async = dataclasses.replace(fed_sync, buffer_size=M,
+                                    speed_dist="fixed")
+    async_ = BufferedAsyncSimulation(
+        lr_loss, params, fed_async, DeviceBatcher(data, parts, batch_size=10),
+        k_schedule=ks)
+    h_async = async_.run(5)
+    np.testing.assert_allclose(h_sync.loss, h_async.loss, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(sync.state),
+                    jax.tree.leaves(async_.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=1e-6)

@@ -10,7 +10,7 @@ import pytest
 
 import _seed_rounds as seed_rounds
 from repro.configs.base import FedConfig
-from repro.core import rounds
+from repro.core import engine, rounds
 from repro.core.fedopt import ALGORITHMS, get_algorithm
 from repro.models.simple import quad_loss
 
@@ -114,6 +114,67 @@ def test_traced_lam_preserves_bf16_state():
     out, _ = fn(state, b, KS, W, jnp.float32(0.5))
     assert out["params"]["x"].dtype == jnp.bfloat16
     assert out["nu"]["x"].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_chunked_scan_bit_identical(name):
+    """Device-resident chunking (core/engine.py): R rounds fused into one
+    jitted lax.scan must equal R sequential jit(round_fn) calls BIT-FOR-BIT
+    — the scan body is the unmodified layered round."""
+    algo = _algo(name)
+    r = 4
+    state_a = rounds.init_state({"x": jnp.zeros((D,), jnp.float32)}, M, algo)
+    state_b = dict(state_a)
+    fn = jax.jit(rounds.make_round(quad_loss, algo, lr=0.01, k_max=K_MAX))
+    b = _batches()
+    lam = jnp.float32(algo.lam)
+    metrics_a = None
+    for _ in range(r):
+        state_a, metrics_a = fn(state_a, b, KS, W, lam)
+    chunk = engine.make_round_chunk(
+        rounds.make_round(quad_loss, algo, lr=0.01, k_max=K_MAX), r,
+        donate=False)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), b)
+    state_b, metrics_b = chunk(state_b, stacked,
+                               jnp.broadcast_to(KS, (r, M)),
+                               jnp.broadcast_to(W, (r, M)),
+                               jnp.full((r,), lam))
+    metrics_last = {k: v[-1] for k, v in metrics_b.items()}
+    _assert_identical((state_a, metrics_a), (state_b, metrics_last))
+    for k, v in metrics_b.items():
+        assert v.shape == (r,), f"metric {k!r} not stacked per round"
+
+
+def test_chunked_simulation_matches_per_round_loop():
+    """FederatedSimulation chunked at the eval cadence == the chunk_rounds=1
+    compat loop, bit-for-bit (host sampler: identical batches by
+    construction, identical rounds by the scan golden test)."""
+    from repro.data import FederatedBatcher, fedprox_synthetic
+    from repro.fed import FederatedSimulation
+    from repro.models.simple import lr_accuracy, lr_loss
+
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    params = {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+    fed = FedConfig(algorithm="fedagrac", n_clients=M, lr=0.05,
+                    calibration_rate=0.5, weights="data")
+    ks = np.full((20, M), 3, np.int32)
+    ev = lambda p: float(lr_accuracy(p, {"x": data.x, "y": data.y}))
+
+    def make():
+        return FederatedSimulation(
+            lr_loss, params, fed, FederatedBatcher(data, parts, 10),
+            eval_fn=ev, k_schedule=ks,
+            lam_schedule=lambda t: 0.25 * (t + 1))
+    a, b = make(), make()
+    ha = a.run(12, eval_every=4, chunk_rounds=1)
+    hb = b.run(12, eval_every=4)               # auto-chunks at eval cadence
+    assert ha.loss == hb.loss
+    assert ha.kbar == hb.kbar
+    assert ha.metric == hb.metric
+    for la, lb in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 def test_lam_schedule_does_not_retrace():
