@@ -13,9 +13,10 @@ import traceback
 
 from benchmarks import (ablation_int8_nu, engine_bench, fairness,
                         fig2_lambda, fig3_orientation, fig4_grid,
-                        fig5_curves, kernel_bench, roofline_table,
-                        server_opt, table1_deterioration, table2_utilization,
-                        table6_rounds, table_async, thm1_quadratic)
+                        fig5_curves, kernel_bench, population_bench,
+                        roofline_table, server_opt, table1_deterioration,
+                        table2_utilization, table6_rounds, table_async,
+                        thm1_quadratic)
 
 MODULES = {
     "thm1": thm1_quadratic,
@@ -33,7 +34,24 @@ MODULES = {
     "server_opt": server_opt,
     "roofline": roofline_table,
     "engine": engine_bench,
+    "population": population_bench,
 }
+
+
+def parse_only(only: str | None) -> list[str]:
+    """Validate ``--only``: whitespace-tolerant, order-preserving dedup, and
+    a fail-fast error naming every valid module for any unknown (or empty)
+    selection — never a silent no-op run."""
+    if only is None:
+        return list(MODULES)
+    names = [n.strip() for n in only.split(",") if n.strip()]
+    names = list(dict.fromkeys(names))
+    unknown = [n for n in names if n not in MODULES]
+    if unknown or not names:
+        what = (f"unknown module(s) {unknown}" if unknown
+                else f"--only {only!r} selects nothing")
+        raise SystemExit(f"error: {what}; choose from {sorted(MODULES)}")
+    return names
 
 
 def main() -> None:
@@ -44,11 +62,7 @@ def main() -> None:
                     help=f"comma-separated subset of {sorted(MODULES)}")
     args = ap.parse_args()
 
-    names = (args.only.split(",") if args.only else list(MODULES))
-    unknown = [n for n in names if n not in MODULES]
-    if unknown:
-        ap.error(f"unknown module(s) {unknown}; choose from "
-                 f"{sorted(MODULES)}")
+    names = parse_only(args.only)
     failures = []
     for name in names:
         mod = MODULES[name]

@@ -229,7 +229,9 @@ class FedConfig:
     # -- buffered semi-asynchronous execution (fed/async_engine.py) ----------
     # buffer_size M' ≤ M: the server updates once M' client reports arrive
     # (Nguyen et al. FedBuff).  0 ⇒ fully synchronous rounds; 1 ⇒ FedAsync;
-    # M ⇒ reduces to the synchronous round (DESIGN.md §5).
+    # M ⇒ reduces to the synchronous round (DESIGN.md §5).  Under partial
+    # participation the async buffer is capped at the concurrency C (and 0
+    # defaults to C): one update never spans more than one cohort sweep.
     buffer_size: int = 0
     staleness: Literal["constant", "hinge", "poly"] = "constant"
     staleness_a: float = 0.5               # discount decay rate (hinge/poly)
@@ -238,6 +240,17 @@ class FedConfig:
     speed_dist: Literal["fixed", "uniform", "lognormal", "bimodal"] = "lognormal"
     speed_sigma: float = 0.5               # lognormal σ of client step rates
     comm_latency: float = 0.0              # fixed per-report overhead (s)
+    # -- client population / partial participation (fed/population.py) -------
+    # cohort_size C ≤ M: each synchronous round runs a sampled cohort of C
+    # clients (the async engine caps concurrency at C).  0 ⇒ C = M.
+    # sampler "all" with C = M is the golden-pinned full-participation
+    # path; with C < M it resolves to "uniform" (cohort_size alone opts
+    # into partial participation).
+    cohort_size: int = 0
+    cohort_sampler: Literal["all", "uniform", "weighted", "availability",
+                            "round_robin"] = "all"
+    availability: float = 1.0              # mean client up-probability
+    cohort_nu_decay: float = 0.0           # stale ν⁽ⁱ⁾ decay toward ν per round
 
 
 def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 128,

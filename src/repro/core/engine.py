@@ -65,3 +65,59 @@ def make_round_chunk(round_fn: Callable, r: Optional[int], *,
         return jax.lax.scan(body, state, (batches, k_steps, weights, lam))
 
     return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+
+
+def make_population_chunk(round_fn: Callable, r: Optional[int], *,
+                          cohort_fn: Optional[Callable] = None,
+                          sample_fn: Optional[Callable] = None,
+                          donate: bool = True) -> Callable:
+    """Fuse ``r`` cohort rounds (stages.make_cohort_round) into one jitted
+    ``lax.scan`` — the partial-participation analogue of
+    ``make_round_chunk`` (DESIGN.md §10).
+
+    Two modes, mirroring the batcher families:
+
+    * **device** (``cohort_fn`` + ``sample_fn`` given) — the cohort draw AND
+      the batch generation both run inside the scan:
+      ``chunk_fn(state, ts, k_rows, lam)`` with ``ts`` the ``(r,)`` round
+      indices and ``k_rows`` the ``(r, M)`` population K-schedule rows.
+      ``cohort_fn(t) -> (ids, w̃)`` (``ClientPopulation.cohort_and_weights``)
+      and ``sample_fn(t, ids) -> (C, k_max, …) batches``
+      (``DeviceBatcher.sample_cohort``) — the chunk reads no host data and
+      materializes only O(C) batch rows.
+    * **host** (neither given) — cohorts precomputed on host:
+      ``chunk_fn(state, batches, cohorts, k_steps, cweights, lam)`` with
+      every input stacked per round (leading ``(r,)``, client axis C).
+    """
+    if (cohort_fn is None) != (sample_fn is None):
+        raise ValueError("cohort_fn and sample_fn come as a pair: in-scan "
+                         "cohorts need an in-scan (device) batch sampler")
+
+    if cohort_fn is not None:
+        def chunk_fn(state: PyTree, ts: jax.Array, k_rows: jax.Array,
+                     lam: jax.Array):
+            assert r is None or ts.shape[0] == r, (
+                f"chunk built for {r} rounds, got {ts.shape[0]}")
+
+            def body(st, xs):
+                t, krow, l = xs
+                ids, cw = cohort_fn(t)
+                return round_fn(st, sample_fn(t, ids), ids, krow[ids],
+                                cw, l)
+
+            return jax.lax.scan(body, state, (ts, k_rows, lam))
+    else:
+        def chunk_fn(state: PyTree, batches: PyTree, cohorts: jax.Array,
+                     k_steps: jax.Array, cweights: jax.Array,
+                     lam: jax.Array):
+            assert r is None or cohorts.shape[0] == r, (
+                f"chunk built for {r} rounds, got {cohorts.shape[0]}")
+
+            def body(st, xs):
+                b, ids, k, w, l = xs
+                return round_fn(st, b, ids, k, w, l)
+
+            return jax.lax.scan(body, state,
+                                (batches, cohorts, k_steps, cweights, lam))
+
+    return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())

@@ -184,6 +184,37 @@ BUFFERED_AGGREGATORS: dict[str, Callable] = {
 }
 
 
+def nu_mass_mix(nu: PyTree, contrib: PyTree, mass: jax.Array) -> PyTree:
+    """ν ← (1 − ρ) ν + (ρ/Σw̃)·Σ w̃ transmitᵢ with ρ = min(Σw̃, 1): keep ρ
+    of the new signal, renormalized — convex even when duplicate reporters
+    (or Horvitz–Thompson weights) push Σw̃ past 1; for Σw̃ ≤ 1 this is
+    exactly (1 − Σw̃)·ν + Σ w̃ transmitᵢ, so the synchronous reduction
+    (Σw̃ = 1) is untouched.  Shared by the buffered-async engine and the
+    cohort round (DESIGN.md §5, §10)."""
+    rho = jnp.minimum(mass, 1.0)
+    return jax.tree.map(
+        lambda n, c: ((1.0 - rho) * n.astype(jnp.float32)
+                      + (rho / mass) * c.astype(jnp.float32)
+                      ).astype(n.dtype), nu, contrib)
+
+
+def scatter_nu_rows(nu_i: PyTree, new_nu: PyTree, avg_g: PyTree,
+                    ids: jax.Array, nu_decay: float = 0.0) -> PyTree:
+    """Write the participants' fresh ν̄⁽ⁱ⁾ rows into the population-sized
+    state; non-participants' stale rows decay toward the new global ν at
+    ``nu_decay`` per update — their correction c⁽ⁱ⁾ = ν − ν⁽ⁱ⁾ → 0, so cold
+    clients degrade gracefully to plain local SGD (0 = frozen rows).  Decay
+    first, scatter second: the overwrite keeps participants exact.  Shared
+    by the cohort round and the buffered-async engine (DESIGN.md §10)."""
+    def one(nui, nu, g):
+        if nu_decay:
+            nui = (nui.astype(jnp.float32)
+                   + nu_decay * (nu[None].astype(jnp.float32)
+                                 - nui.astype(jnp.float32)))
+        return nui.at[ids].set(g.astype(nui.dtype)).astype(g.dtype)
+    return jax.tree.map(one, nu_i, new_nu, avg_g)
+
+
 # ---------------------------------------------------------------------------
 # stage 3: orientation (transmit selection)
 # ---------------------------------------------------------------------------
@@ -415,6 +446,97 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
             new_state["nu_i"] = constrain(avg_g, 1)
 
         metrics = {"loss": jnp.dot(weights, loss0), "kbar": kbar}
+        return new_state, metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# composition: the cohort round (partial participation, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                      algo: Algorithm, *, lr: float, k_max: int,
+                      nu_decay: float = 0.0,
+                      track_nu: str = "delta",
+                      spmd_axis_name=None,
+                      quantize_transmit: bool = False,
+                      param_constraint: Optional[Callable[[PyTree, int],
+                                                          PyTree]] = None):
+    """The synchronous round over a sampled cohort of C ≤ M clients.
+
+    ``round_fn(state, batches, cohort, k_steps, cweights, lam=None)`` —
+    ``cohort`` is the (C,) int32 client-id draw (fed/population.py),
+    ``batches``/``k_steps`` are cohort-indexed (leading C), ``cweights`` the
+    renormalized w̃ (``ClientPopulation.cohort_weights``).  The server state
+    stays population-sized: the cohort's ν⁽ⁱ⁾ rows are gathered on device,
+    the k-step scan runs over the C axis, and updated rows scatter back.
+
+    Aggregation is the pseudo-delta (Horvitz–Thompson) form
+    ``x ← serveropt(x, Σ w̃_i (x⁽ⁱ⁾ − x))`` so Σ w̃ ≠ 1 stays unbiased, and
+    ν mass-mixes exactly like the buffered-async engine:
+    ``ν ← (1 − ρ) ν + (ρ/Σw̃) Σ w̃ transmitᵢ`` with ρ = min(Σw̃, 1) — at
+    Σw̃ = 1 this is the synchronous update.  Non-participants' stale ν⁽ⁱ⁾
+    rows decay toward the new global ν at rate ``nu_decay`` per round (their
+    correction c⁽ⁱ⁾ = ν − ν⁽ⁱ⁾ → 0, i.e. cold clients degrade gracefully to
+    plain local SGD); ``nu_decay=0`` keeps stale rows frozen.
+    """
+    client_update = make_client_update(
+        loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
+        spmd_axis_name=spmd_axis_name)
+    aggregate = BUFFERED_AGGREGATORS[algo.aggregator]
+
+    def constrain(tree, client_dims):
+        if param_constraint is None:
+            return tree
+        return param_constraint(tree, client_dims)
+
+    def round_fn(state: dict, batches: PyTree, cohort: jax.Array,
+                 k_steps: jax.Array, cweights: jax.Array, lam=None):
+        if lam is None:
+            lam = algo.lam
+        params0 = state["params"]
+        c = cohort.shape[0]
+        kf = k_steps.astype(jnp.float32)
+        mass = jnp.sum(cweights)
+        kbar = jnp.dot(cweights, kf) / mass          # cohort-weighted K̄
+
+        if algo.uses_nu:
+            # gather only the cohort's correction rows: compute is O(C)
+            c_all = jax.tree.map(
+                lambda nu, nui: (nu[None] - nui[cohort]) if nui.ndim
+                else nu - nui, state["nu"], state["nu_i"])
+        else:
+            c_all = zero_corrections(params0, c)
+
+        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+                                                k_steps, lam)
+        x_i = constrain(x_i, 1)
+
+        # pseudo-delta aggregation (unbiased under Σ w̃ ≠ 1): the buffered
+        # aggregators with the shared x̃ broadcast as every client's anchor
+        anchor1 = jax.tree.map(lambda p: p[None], params0)
+        agg = aggregate(params0, anchor1, x_i, kf, cweights, kbar)
+
+        new_state = dict(state)
+        new_params = server_update(algo, state, params0, agg, new_state)
+        new_params = constrain(new_params, 0)
+        new_state["params"] = new_params
+        new_state["round"] = state["round"] + 1
+
+        if algo.uses_nu:
+            transmit, avg_g = orientation_transmit(
+                algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
+                track_nu=track_nu, quantize_transmit=quantize_transmit)
+            contrib = tree_wsum(cweights, transmit)
+            new_nu = nu_mass_mix(state["nu"], contrib, mass)
+            new_state["nu"] = constrain(new_nu, 0)
+            new_state["nu_i"] = constrain(
+                scatter_nu_rows(state["nu_i"], new_nu, avg_g, cohort,
+                                nu_decay), 1)
+
+        metrics = {"loss": jnp.dot(cweights, loss0) / mass, "kbar": kbar,
+                   "mass": mass}
         return new_state, metrics
 
     return round_fn

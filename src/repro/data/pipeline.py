@@ -71,6 +71,37 @@ class FederatedBatcher:
         return {"x": jnp.asarray(self._x[idx]),
                 "y": jnp.asarray(self._y[idx])}
 
+    # -- cohort-indexed sampling (partial participation, DESIGN.md §10) ------
+
+    def client_indices(self, t: int, i: int, k_max: int) -> np.ndarray:
+        """(k_max, B) dataset rows for client ``i``'s round-``t`` draw from a
+        per-``(seed, t, i)`` stream — client i's batches are identical no
+        matter which cohort it lands in (unlike ``round_indices``, whose
+        single per-round stream couples clients sequentially)."""
+        rng = np.random.default_rng((self.seed, t, i))
+        part = self.parts[i]
+        return part[rng.integers(0, len(part), (k_max, self.batch_size))]
+
+    def cohort_indices(self, t: int, cohort: np.ndarray,
+                       k_max: int) -> np.ndarray:
+        """(C, k_max, B) rows for the sampled cohort only — O(C) not O(M)."""
+        return np.stack([self.client_indices(t, int(i), k_max)
+                         for i in cohort])
+
+    def cohort_batches(self, t: int, cohort: np.ndarray, k_max: int) -> dict:
+        idx = self.cohort_indices(t, cohort, k_max)
+        return {"x": jnp.asarray(self._x[idx]),
+                "y": jnp.asarray(self._y[idx])}
+
+    def chunk_cohort_batches(self, t0: int, cohorts: np.ndarray,
+                             k_max: int) -> dict:
+        """(R, C, k_max, B, …) stacked cohort rounds; ``cohorts`` is the
+        (R, C) id matrix for rounds ``t0 … t0+R-1``."""
+        idx = np.stack([self.cohort_indices(t0 + j, cohorts[j], k_max)
+                        for j in range(cohorts.shape[0])])
+        return {"x": jnp.asarray(self._x[idx]),
+                "y": jnp.asarray(self._y[idx])}
+
 
 class LMFederatedBatcher:
     """Token-stream version: each client owns a topic-skewed stream."""
@@ -96,6 +127,26 @@ class LMFederatedBatcher:
             labs.append(lab[idx])
         return {"tokens": jnp.asarray(np.stack(toks)),
                 "labels": jnp.asarray(np.stack(labs))}
+
+    def cohort_batches(self, t: int, cohort: np.ndarray, k_max: int) -> dict:
+        """(C, k_max, B, …) streams for the sampled cohort only (per-(t, i)
+        draw streams, independent of cohort membership — DESIGN.md §10)."""
+        toks, labs = [], []
+        for i in cohort:
+            i = int(i)
+            rng = np.random.default_rng((self.seed, t, i))
+            idx = rng.integers(0, self._toks[i].shape[0],
+                               (k_max, self.batch_size))
+            toks.append(self._toks[i][idx])
+            labs.append(self._labs[i][idx])
+        return {"tokens": jnp.asarray(np.stack(toks)),
+                "labels": jnp.asarray(np.stack(labs))}
+
+    def chunk_cohort_batches(self, t0: int, cohorts: np.ndarray,
+                             k_max: int) -> dict:
+        waves = [self.cohort_batches(t0 + j, cohorts[j], k_max)
+                 for j in range(cohorts.shape[0])]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *waves)
 
 
 class DeviceBatcher:
@@ -150,6 +201,13 @@ class DeviceBatcher:
         engine's in-scan sampler; row ``i`` equals ``sample_row(t, i)``."""
         return jax.vmap(lambda i: self.sample_row(t, i, k_max))(
             jnp.arange(self.m))
+
+    def sample_cohort(self, t, cohort, k_max: int) -> dict:
+        """(C, k_max, B, …) microbatches for a sampled cohort — the cohort
+        chunk's in-scan sampler (DESIGN.md §10).  Row j equals
+        ``sample_row(t, cohort[j])``: a client's draw is independent of
+        cohort membership, so memory is O(C) with full-wave consistency."""
+        return jax.vmap(lambda i: self.sample_row(t, i, k_max))(cohort)
 
     # -- host-compatible API (eager; used by the chunk_rounds=1 path) -------
 

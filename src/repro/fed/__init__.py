@@ -1,9 +1,11 @@
 from repro.fed.async_engine import BufferedAsyncSimulation, staleness_weight
 from repro.fed.clock import (ClientClock, Timeline, make_clock,
                              simulate_timeline)
+from repro.fed.population import SAMPLERS, ClientPopulation
 from repro.fed.simulation import (FederatedSimulation, History,
                                   compare_algorithms)
 
 __all__ = ["FederatedSimulation", "History", "compare_algorithms",
            "BufferedAsyncSimulation", "staleness_weight", "ClientClock",
+           "ClientPopulation", "SAMPLERS",
            "Timeline", "make_clock", "simulate_timeline"]

@@ -56,6 +56,7 @@ from repro.core.tree_util import tree_wsum
 from repro.data.partition import gaussian_k_schedule
 from repro.fed.clock import ClientClock, Timeline, make_clock, \
     simulate_timeline
+from repro.fed.population import ClientPopulation
 from repro.fed.simulation import History
 
 PyTree = Any
@@ -94,6 +95,7 @@ class BufferedAsyncSimulation:
                  k_schedule: Optional[np.ndarray] = None,
                  lam_schedule: Optional[Callable[[int], float]] = None,
                  clock: Optional[ClientClock] = None,
+                 population: Optional[ClientPopulation] = None,
                  t_max: int = 10_000):
         m = fed.n_clients
         self.fed = fed
@@ -116,6 +118,35 @@ class BufferedAsyncSimulation:
         self.weights = (np.asarray(batcher.weights)
                         if fed.weights == "data"
                         else np.full((m,), 1.0 / m, np.float32))
+        # partial participation (fed/population.py, DESIGN.md §10): the
+        # timeline keeps only C = cohort_size tasks in flight, re-filling
+        # each freed slot by the population sampler; sampler "all" (C = M)
+        # reproduces the legacy always-in-flight stream bit-for-bit
+        self.population = (population if population is not None
+                           else ClientPopulation.from_config(
+                               fed, m=m, weights=self.weights))
+        if self.population is not None:
+            if self.population.m != m:
+                raise ValueError(
+                    f"population of {self.population.m} clients does not "
+                    f"match fed.n_clients={m}")
+            c = self.population.cohort_size
+            if not self.population.full_participation:
+                # only C tasks are in flight: the buffer must not span more
+                # than one concurrency sweep, or Σ w̃ ≈ B/C > 1 and the raw
+                # pseudo-delta step overshoots by that factor
+                if fed.buffer_size <= 0:
+                    self.buffer = c
+                elif self.buffer > c:
+                    raise ValueError(
+                        f"buffer_size {self.buffer} exceeds the population "
+                        f"concurrency C={c}; use buffer_size ≤ C (0 "
+                        f"defaults to C under partial participation)")
+            if clock is None and np.any(self.population.step_rate != 1.0):
+                # the population's step-rate profile modulates the clock
+                self.clock = ClientClock(
+                    speeds=self.clock.speeds * self.population.step_rate,
+                    latency=self.clock.latency)
         # private copy: the scanned chunk donates its carry (state + anchor
         # buffers), which would delete a caller-owned params tree
         params = jax.tree.map(jnp.array, params)
@@ -163,6 +194,11 @@ class BufferedAsyncSimulation:
         uses_nu = algo.uses_nu
         device = self._device_sampler
         batcher, k_max = self.batcher, self.k_max
+        # stale-ν⁽ⁱ⁾ decay is a PARTIAL-participation rule (DESIGN.md §10):
+        # with every client in flight each row refreshes on its own report
+        nu_decay = (self.fed.cohort_nu_decay
+                    if self.population is not None
+                    and not self.population.full_participation else 0.0)
         client_update = stages.make_client_update(
             self._loss_fn, algo, lr=lr, k_max=k_max, per_client_anchor=True)
         aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
@@ -199,9 +235,13 @@ class BufferedAsyncSimulation:
             kbar = jnp.dot(sw, kf) / mass            # buffer-local K̄
 
             if uses_nu:
-                # correction each client ran with: c⁽ⁱ⁾ = ν_{v_i} − ν⁽ⁱ⁾
-                # (ν⁽ⁱ⁾ rows change only when client i itself reports, so the
-                # current row still holds the dispatch-time value)
+                # correction each client ran with: c⁽ⁱ⁾ = ν_{v_i} − ν⁽ⁱ⁾.
+                # With nu_decay = 0 the current ν⁽ⁱ⁾ row IS the
+                # dispatch-time value (rows change only when their client
+                # reports); with decay the row has drifted toward ν by
+                # (1 − (1−d)^τ) since dispatch — an accepted approximation
+                # (the drift shrinks the correction, never grows it) that
+                # avoids a second (M+1)-row snapshot buffer
                 nu_anchor = gather(N, state["nu"])
                 c_b = jax.tree.map(lambda na, nui: na - nui[ids],
                                    nu_anchor, state["nu_i"])
@@ -223,22 +263,13 @@ class BufferedAsyncSimulation:
                     algo, params, x_b, g0_b, acc_b, c_b, kf, kbar, lr, lam,
                     anchor_i=anchor_i)
                 contrib = tree_wsum(sw, transmit)
-                # convex mix even when mass > 1 (duplicate reporters): keep
-                # ρ = min(mass, 1) of the new signal, renormalized — for
-                # mass ≤ 1 this is exactly (1 − mass)·ν + contrib, so the
-                # synchronous reduction (mass = 1) is untouched
-                rho = jnp.minimum(mass, 1.0)
-                new_state["nu"] = jax.tree.map(
-                    lambda nu, c: ((1.0 - rho) * nu.astype(jnp.float32)
-                                   + (rho / mass) * c.astype(jnp.float32)
-                                   ).astype(nu.dtype),
-                    state["nu"], contrib)
+                new_state["nu"] = stages.nu_mass_mix(state["nu"], contrib,
+                                                     mass)
                 # duplicate idx (a fast client reporting twice into one
                 # buffer) resolves arbitrarily between its two same-buffer
                 # reports — both are current to within one update
-                new_state["nu_i"] = jax.tree.map(
-                    lambda nui, g: nui.at[ids].set(g.astype(nui.dtype)),
-                    state["nu_i"], avg_g)
+                new_state["nu_i"] = stages.scatter_nu_rows(
+                    state["nu_i"], new_state["nu"], avg_g, ids, nu_decay)
 
             def scatter(buf, old, new):
                 # re-dispatch anchors: the pre-update model, or the
@@ -315,19 +346,26 @@ class BufferedAsyncSimulation:
         hist = History()
         fed = self.fed
         tl = simulate_timeline(self.k_schedule, self.clock, self.buffer,
-                               t_updates)
+                               t_updates, population=self.population)
         tau = tl.staleness
         s = staleness_weight(tau, fed.staleness, fed.staleness_a,
                              fed.staleness_b)
-        sw_all = (self.weights[tl.ids] * s).astype(np.float32)
+        # per-report base weights: raw ω for full participation, the
+        # population's per-sampler renormalization (Horvitz–Thompson /
+        # uniform-1/C) under partial participation (DESIGN.md §10)
+        base_w = (self.weights
+                  if self.population is None
+                  or self.population.full_participation
+                  else self.population.report_weights())
+        sw_all = (base_w[tl.ids] * s).astype(np.float32)
         cur_all = tl.versions == np.arange(t_updates)[:, None]
-        # duplicate reporters: only the LAST occurrence re-writes the
+        # duplicate dispatches: only the LAST occurrence re-writes the
         # client's anchor row; earlier ones land in the scratch row M
-        write_ids = tl.ids.copy()
+        write_ids = tl.dispatch_ids.copy()
         for u in range(t_updates):
             seen: set[int] = set()
             for j in range(self.buffer - 1, -1, -1):
-                i = int(tl.ids[u, j])
+                i = int(tl.dispatch_ids[u, j])
                 if i in seen:
                     write_ids[u, j] = self.clock.m
                 else:

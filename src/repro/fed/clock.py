@@ -63,9 +63,14 @@ class Timeline:
     * ``staleness``  (T, B) int — τ = u − version.
     * ``arrival_t``  (T, B) f64 — simulated arrival times; ``arrival_t[u,-1]``
       is the server-update timestamp (``History.sim_time``).
-    * ``fresh``      (T, B) bool — the reporter's RE-dispatched task carries
-      the post-update model (the tie-upgrade rule fired), i.e. its next
-      anchor is the update's output rather than its input.
+    * ``fresh``      (T, B) bool — the task DISPATCHED at this event carries
+      the post-update model (the tie-upgrade rule fired), i.e. its anchor is
+      the update's output rather than its input.
+    * ``dispatch_ids`` (T, B) int — the client dispatched at each report
+      event.  Without a population this is ``ids`` (the reporter is
+      re-dispatched immediately); with partial participation
+      (fed/population.py) the freed slot goes to a sampler-chosen client, so
+      the concurrency cap C becomes a population property (DESIGN.md §10).
     """
     ids: np.ndarray
     versions: np.ndarray
@@ -74,6 +79,7 @@ class Timeline:
     staleness: np.ndarray
     arrival_t: np.ndarray
     fresh: np.ndarray
+    dispatch_ids: np.ndarray
 
     @property
     def t_updates(self) -> int:
@@ -85,20 +91,29 @@ class Timeline:
 
 
 def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
-                      buffer: int, t_updates: int) -> Timeline:
+                      buffer: int, t_updates: int,
+                      population=None) -> Timeline:
     """Run the FedBuff event loop for ``t_updates`` server updates.
 
     Event-accurate semantics (identical to the engine's original in-line
-    loop, pinned by tests/test_async_engine.py): every popped report
-    re-dispatches its client IMMEDIATELY on the current (pre-update) model —
-    the server only steps when the buffer fills, so a fast client's next
-    report can land inside this same buffer ('M reports' counts reports,
-    not distinct clients).  A client whose report landed at the very
-    instant the buffer filled was re-dispatched and the server stepped at
-    the same timestamp — it receives the FRESH post-update model (zero
-    elapsed time on its new task, so only the anchor version changes).
-    With buffer = M and equal speeds every arrival ties, preserving the
-    exact synchronous reduction.
+    loop, pinned by tests/test_async_engine.py): every popped report frees a
+    concurrency slot which is re-filled IMMEDIATELY on the current
+    (pre-update) model — the server only steps when the buffer fills, so a
+    fast client's next report can land inside this same buffer ('M reports'
+    counts reports, not distinct clients).  A task dispatched at the very
+    instant the buffer filled starts as the server steps at the same
+    timestamp — it receives the FRESH post-update model (zero elapsed time,
+    so only the anchor version changes).  With buffer = M and equal speeds
+    every arrival ties, preserving the exact synchronous reduction.
+
+    Without ``population`` the freed slot goes back to the reporter (all M
+    clients always in flight — the legacy full-participation stream).  With
+    a ``ClientPopulation`` only C = ``population.cohort_size`` tasks are in
+    flight and each freed slot is re-filled by ``population.pick_dispatch``
+    (the sampler choosing among idle clients) — partial participation as a
+    property of the dispatch process.  ``sampler="all"`` (C = M) leaves the
+    reporter as the only idle client, reproducing the legacy stream
+    bit-for-bit (the golden-pinned special case, DESIGN.md §10).
     """
     m = clock.m
     k_schedule = np.asarray(k_schedule)
@@ -106,6 +121,7 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
     # client -> (version, K, wave, t_dispatch)
     inflight: dict[int, tuple[int, int, int, float]] = {}
     wave_ctr = np.zeros(m, np.int64)
+    busy = np.zeros(m, bool)
     seq = 0
 
     def dispatch(i: int, t_now: float, version: int) -> None:
@@ -114,14 +130,25 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
         k = int(k_schedule[d % len(k_schedule), i])
         inflight[i] = (version, k, d, t_now)
         wave_ctr[i] += 1
+        busy[i] = True
         heapq.heappush(heap, (t_now + clock.duration(i, k), seq, i))
         seq += 1
 
-    for i in range(m):
-        dispatch(i, 0.0, 0)
+    if population is None:
+        initial = np.arange(m)
+        rng = None
+    else:
+        if population.m != m:
+            raise ValueError(f"population of {population.m} clients does "
+                             f"not match the clock's m={m}")
+        rng = np.random.default_rng((population.seed, 0x5eed))
+        initial = population.initial_dispatch(rng)
+    for i in initial:
+        dispatch(int(i), 0.0, 0)
 
     shape = (t_updates, buffer)
     ids = np.zeros(shape, np.int64)
+    dispatch_ids = np.zeros(shape, np.int64)
     versions = np.zeros(shape, np.int64)
     waves = np.zeros(shape, np.int64)
     k_steps = np.zeros(shape, np.int64)
@@ -129,31 +156,41 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
     fresh = np.zeros(shape, bool)
 
     for u in range(t_updates):
-        pending: list[tuple[float, int, tuple]] = []
+        pending: list[tuple[float, int, int, tuple]] = []
         while len(pending) < buffer:
             t_arr, _, i = heapq.heappop(heap)
-            pending.append((t_arr, i, inflight.pop(i)))
-            dispatch(i, t_arr, u)
+            task = inflight.pop(i)
+            busy[i] = False
+            nxt = (i if population is None
+                   else population.pick_dispatch(rng, busy, i))
+            pending.append((t_arr, i, nxt, task))
+            dispatch(nxt, t_arr, u)
         now = pending[-1][0]
-        for j, (t_arr, i, (v, k, d, _)) in enumerate(pending):
+        for j, (t_arr, i, nxt, (v, k, d, _)) in enumerate(pending):
             ids[u, j] = i
+            dispatch_ids[u, j] = nxt
             versions[u, j] = v
             waves[u, j] = d
             k_steps[u, j] = k
             arrival_t[u, j] = t_arr
-        # tie upgrade (see docstring); idempotent for duplicate reporters —
+        # tie upgrade (see docstring); idempotent for duplicate dispatches —
         # the check always lands on the client's NEWEST in-flight task
-        for t_arr, i, _ in pending:
-            if t_arr == now and i in inflight:
-                ver, k, d, t_disp = inflight[i]
+        for t_arr, _, nxt, _ in pending:
+            if t_arr == now and nxt in inflight:
+                ver, k, d, t_disp = inflight[nxt]
                 if ver == u and t_disp == t_arr:
-                    inflight[i] = (u + 1, k, d, t_disp)
-        fresh[u] = [inflight[i][0] == u + 1 for i in ids[u]]
+                    inflight[nxt] = (u + 1, k, d, t_disp)
+        # a dispatched task already consumed within this same buffer (and
+        # whose client was not re-dispatched) has no in-flight entry: its
+        # anchor row is rewritten before it is ever read again
+        fresh[u] = [nxt in inflight and inflight[nxt][0] == u + 1
+                    for nxt in dispatch_ids[u]]
 
     staleness = np.arange(t_updates, dtype=np.int64)[:, None] - versions
     return Timeline(ids=ids, versions=versions, waves=waves,
                     k_steps=k_steps, staleness=staleness,
-                    arrival_t=arrival_t, fresh=fresh)
+                    arrival_t=arrival_t, fresh=fresh,
+                    dispatch_ids=dispatch_ids)
 
 
 def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,

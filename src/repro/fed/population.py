@@ -1,0 +1,311 @@
+"""Client population: partial participation and cohort sampling (DESIGN.md §10).
+
+Every run used to be full-participation: both engines marched all ``M``
+clients through every round.  ``ClientPopulation`` makes *who runs* a
+first-class property: the server keeps per-client metadata (data mass ω_i,
+step-rate profile, availability) for the FULL population while each round
+executes only a sampled **cohort** of ``C ≤ M`` clients.  The synchronous
+engine draws the cohort *inside* the scanned round chunk (core/engine.py),
+the buffered-async engine at dispatch time (fed/clock.py) — so the
+timeline's concurrency cap becomes a population property.
+
+Samplers are pluggable through ``SAMPLERS`` (name → draw function).  Every
+sampler is a pure ``jax.random`` function of ``(seed, round)``: cohorts are
+reproducible, identical on host and inside a jitted scan, and cheap at
+population scale — the uniform draw is an O(C) keyed-permutation evaluation
+(Feistel + cycle-walking), so round cost never grows with M; weighted and
+availability draws are O(M) but memory-bound (a cumsum / a Bernoulli mask),
+not RNG-bound.
+
+Weight renormalization (the unbiasedness rule, DESIGN.md §10): cohort
+aggregation runs in pseudo-delta form  x ← x + Σ_{i∈S} w̃_i (x⁽ⁱ⁾ − x), and
+``cohort_weights`` picks w̃ per sampler so the update is an unbiased
+estimate of the full-participation direction Σ ω_i (x⁽ⁱ⁾ − x):
+
+    all           w̃_i = ω_i                 (Σ w̃ = 1 — the exact round)
+    uniform       w̃_i = ω_i · M/C           (Horvitz–Thompson, π_i = C/M)
+    round_robin   w̃_i = ω_i · M/C           (exact over every M/C-round cycle)
+    weighted      w̃_i = 1/C                 (draws ∝ ω_i with replacement —
+                                             the Li et al. FedAvg scheme II)
+    availability  w̃_i = ω_i / Σ_{j∈S} ω_j   (self-normalized; biased toward
+                                             available clients by design)
+
+The same w̃ feeds the orientation mass-mix  ν ← (1 − ρ) ν + (ρ/Σw̃)·Σ w̃ νᵢ
+(ρ = min(Σw̃, 1)), so the calibration direction stays an estimate of the
+population direction with non-participants represented by the previous ν.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PRNGKey = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# sampler registry — fn(pop, key, t) -> (C,) int32 client ids
+# ---------------------------------------------------------------------------
+
+def _sample_all(pop: "ClientPopulation", key: PRNGKey, t) -> jax.Array:
+    return jnp.arange(pop.m, dtype=jnp.int32)
+
+
+def _mix(x: jax.Array, k: jax.Array) -> jax.Array:
+    """murmur3-style uint32 finalizer — the Feistel round function."""
+    x = (x ^ k) * jnp.uint32(0x9E3779B9)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def _permutation_points(key: PRNGKey, m: int, points: jax.Array
+                        ) -> jax.Array:
+    """Evaluate a keyed pseudorandom permutation of [0, m) at ``points`` —
+    O(|points|), never materializing the M-sized domain.
+
+    A 4-round Feistel network over 2·half bits gives a bijection of
+    [0, 2^{2·half}) ⊇ [0, m); cycle-walking (re-encrypt while the image
+    lands in the padding) restricts it to a bijection of [0, m).  Walking
+    from a point < m terminates: the point's own cycle contains it.
+    """
+    half = (max((m - 1).bit_length(), 2) + 1) // 2
+    mask = jnp.uint32((1 << half) - 1)
+    rks = jax.random.bits(key, (4,), jnp.uint32)
+
+    def enc(v):
+        left, right = v >> half, v & mask
+        for i in range(4):
+            left, right = right, left ^ (_mix(right, rks[i]) & mask)
+        return (left << half) | right
+
+    def walk(v):
+        return jax.lax.while_loop(lambda u: u >= m, enc, enc(v))
+
+    return jax.vmap(walk)(points.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def _sample_uniform(pop: "ClientPopulation", key: PRNGKey, t) -> jax.Array:
+    """Uniform WITHOUT replacement in O(C): the cohort is a keyed
+    pseudorandom permutation of [0, M) evaluated at points 0…C-1 — distinct
+    by bijectivity, uniform to PRP quality, and never touching M elements
+    (an O(M) Gumbel draw alone costs ~1.5 ms at M = 100k on CPU, dominating
+    the whole cohort round)."""
+    return _permutation_points(
+        key, pop.m, jnp.arange(pop.cohort_size, dtype=jnp.uint32))
+
+
+def _sample_weighted(pop: "ClientPopulation", key: PRNGKey, t) -> jax.Array:
+    """Weight-proportional WITH replacement (p = ω) — the classic unbiased
+    FedAvg scheme: aggregate with uniform 1/C weights."""
+    return jax.random.choice(key, pop.m, (pop.cohort_size,), replace=True,
+                             p=pop.weights).astype(jnp.int32)
+
+
+def _sample_availability(pop: "ClientPopulation", key: PRNGKey, t
+                         ) -> jax.Array:
+    """Availability trace: client i is up this round w.p. availability_i;
+    the cohort is a uniform draw among available clients (unavailable ones
+    fill the cohort only when fewer than C are up — their Gumbel scores are
+    pushed below every available client's)."""
+    k_up, k_pick = jax.random.split(key)
+    up = jax.random.uniform(k_up, (pop.m,)) < pop.availability
+    score = jax.random.gumbel(k_pick, (pop.m,)) + jnp.where(up, 0.0, -1e9)
+    return jax.lax.top_k(score, pop.cohort_size)[1].astype(jnp.int32)
+
+
+def _sample_round_robin(pop: "ClientPopulation", key: PRNGKey, t
+                        ) -> jax.Array:
+    """Deterministic cyclic blocks (tests / exact-coverage sweeps): round t
+    runs clients [tC, tC + C) mod M — every client exactly once per M/C
+    rounds when C divides M."""
+    t = jnp.asarray(t, jnp.int32)
+    return (t * pop.cohort_size
+            + jnp.arange(pop.cohort_size, dtype=jnp.int32)) % pop.m
+
+
+SAMPLERS: dict[str, Callable] = {
+    "all": _sample_all,
+    "uniform": _sample_uniform,
+    "weighted": _sample_weighted,
+    "availability": _sample_availability,
+    "round_robin": _sample_round_robin,
+}
+
+
+class ClientPopulation:
+    """Per-client metadata + the cohort draw for a population of M clients.
+
+    ``weights`` is the data mass ω (normalized to sum 1), ``step_rate`` the
+    relative local-step speed profile (consumed by the async clock),
+    ``availability`` the per-client up-probability used by the
+    ``availability`` sampler.  Scalars broadcast to (M,).
+    """
+
+    def __init__(self, m: int, *, cohort_size: Optional[int] = None,
+                 sampler: str = "uniform", seed: int = 0,
+                 weights=None, step_rate=None, availability=1.0):
+        if sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {sampler!r}; available: "
+                             f"{sorted(SAMPLERS)}")
+        self.m = int(m)
+        self.cohort_size = int(cohort_size) if cohort_size else self.m
+        if not 1 <= self.cohort_size <= self.m:
+            raise ValueError(
+                f"cohort_size {self.cohort_size} not in [1, {self.m}]")
+        if sampler == "all" and self.cohort_size != self.m:
+            raise ValueError(
+                f"sampler='all' requires C == M (got C={self.cohort_size}, "
+                f"M={self.m}); pick a partial-participation sampler from "
+                f"{sorted(set(SAMPLERS) - {'all'})}")
+        self.sampler = sampler
+        self.seed = int(seed)
+        w = (np.full((self.m,), 1.0 / self.m) if weights is None
+             else np.asarray(weights, np.float64))
+        self.weights = jnp.asarray(w / w.sum(), jnp.float32)
+        self.step_rate = np.broadcast_to(
+            np.asarray(1.0 if step_rate is None else step_rate, np.float64),
+            (self.m,)).copy()
+        self.availability = jnp.broadcast_to(
+            jnp.asarray(availability, jnp.float32), (self.m,))
+        self._avail_np = np.asarray(self.availability, np.float64)
+        self._key = jax.random.PRNGKey(self.seed)
+        self._host_cw = None          # lazily-jitted host-side cohort draw
+        self._rr_next = 0             # round-robin dispatch pointer (async)
+        self._cdf = None              # lazily-built dispatch-profile CDF
+
+    @property
+    def full_participation(self) -> bool:
+        """True when the cohort machinery is a no-op: the legacy
+        full-participation round is the golden-pinned special case."""
+        return self.sampler == "all"
+
+    @classmethod
+    def from_config(cls, fed, m: Optional[int] = None, weights=None
+                    ) -> Optional["ClientPopulation"]:
+        """Build from ``FedConfig`` cohort fields; None when the config asks
+        for plain full participation (cohort_size ∈ {0, M}, sampler 'all').
+        ``cohort_size < M`` alone implies partial participation, so the
+        default sampler 'all' resolves to 'uniform' there — explicit
+        ``ClientPopulation(…, sampler="all", cohort_size<M)`` still raises."""
+        m = int(m if m is not None else fed.n_clients)
+        c = fed.cohort_size if fed.cohort_size > 0 else m
+        sampler = fed.cohort_sampler
+        if sampler == "all":
+            if c == m:
+                return None
+            sampler = "uniform"
+        return cls(m, cohort_size=c, sampler=sampler,
+                   seed=fed.seed, weights=weights,
+                   availability=fed.availability)
+
+    # -- traceable draws (run on host AND inside jitted scans) ---------------
+
+    def cohort(self, t) -> jax.Array:
+        """(C,) int32 cohort for round ``t`` — pure in ``(seed, t)``."""
+        key = jax.random.fold_in(self._key, jnp.asarray(t, jnp.int32))
+        return SAMPLERS[self.sampler](self, key, t)
+
+    def cohort_weights(self, cohort: jax.Array) -> jax.Array:
+        """(C,) renormalized aggregation weights w̃ (module docstring)."""
+        w = self.weights[cohort]
+        if self.sampler == "all":
+            return w
+        if self.sampler == "weighted":
+            return jnp.full((self.cohort_size,),
+                            1.0 / self.cohort_size, jnp.float32)
+        if self.sampler == "availability":
+            return w / jnp.sum(w)
+        return w * (self.m / self.cohort_size)      # HT: uniform/round_robin
+
+    def cohort_and_weights(self, t) -> tuple[jax.Array, jax.Array]:
+        ids = self.cohort(t)
+        return ids, self.cohort_weights(ids)
+
+    def host_cohort(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side cohort: the SAME jax draw evaluated eagerly, so host
+        and in-scan cohorts are identical for any ``(seed, round)``."""
+        if self._host_cw is None:
+            self._host_cw = jax.jit(self.cohort_and_weights)
+        ids, w = self._host_cw(jnp.int32(t))
+        return np.asarray(ids), np.asarray(w, np.float32)
+
+    # -- async-engine hooks (host-side event loop, fed/clock.py) -------------
+
+    def report_weights(self) -> np.ndarray:
+        """(M,) base per-REPORT aggregation weights for the buffered-async
+        engine (staleness discount multiplies on top) — the same per-sampler
+        renormalization as ``cohort_weights``, with the buffer playing the
+        cohort's role (availability has no per-buffer normalizer host-side;
+        it shares the HT rule, see DESIGN.md §10)."""
+        w = np.asarray(self.weights, np.float64)
+        if self.sampler == "all":
+            return w.astype(np.float32)
+        if self.sampler == "weighted":
+            return np.full((self.m,), 1.0 / self.cohort_size, np.float32)
+        return (w * (self.m / self.cohort_size)).astype(np.float32)
+
+    def initial_dispatch(self, rng: np.random.Generator) -> np.ndarray:
+        """The C distinct clients in flight at t = 0."""
+        if self.sampler == "all":
+            return np.arange(self.m)
+        if self.sampler == "round_robin":
+            self._rr_next = self.cohort_size % self.m
+            return np.arange(self.cohort_size) % self.m
+        p = self._dispatch_profile()
+        if np.count_nonzero(p) < self.cohort_size:
+            # fewer ever-available clients than slots: pad the profile so a
+            # distinct draw exists (mirrors the cohort sampler's fill rule)
+            p = (p + 1.0 / self.m) / (p.sum() + 1.0)
+        return rng.choice(self.m, self.cohort_size, replace=False, p=p)
+
+    def pick_dispatch(self, rng: np.random.Generator, busy: np.ndarray,
+                      freed: int) -> int:
+        """Choose the next client to dispatch among idle (``~busy``)
+        clients — the buffered-async analogue of the cohort draw (one slot
+        frees per report, so concurrency stays capped at C).
+
+        O(1) expected per event: stochastic samplers draw from the
+        precomputed profile CDF and reject busy clients (busy mass ≈ C/M),
+        falling back to an explicit O(M) scan only on a pathological
+        streak; ``all`` re-dispatches the reporter with NO rng draw (the
+        legacy always-in-flight stream, bit-for-bit) and ``round_robin``
+        walks its cyclic pointer past busy clients."""
+        if self.sampler == "all":
+            return int(freed)                  # the only idle client
+        if self.sampler == "round_robin":
+            for _ in range(self.m):
+                i = self._rr_next
+                self._rr_next = (i + 1) % self.m
+                if not busy[i]:
+                    return i
+            raise RuntimeError("no idle client (caller must free one)")
+        cdf = self._profile_cdf()
+        for _ in range(64):
+            i = min(int(np.searchsorted(cdf, rng.random(), side="right")),
+                    self.m - 1)
+            if not busy[i]:
+                return i
+        ids = np.flatnonzero(~busy)
+        p = self._dispatch_profile()[ids]
+        if p.sum() <= 0:                 # every idle client unavailable:
+            p = np.ones(len(ids))        # fall back to a uniform pick
+        return int(rng.choice(ids, p=p / p.sum()))
+
+    def _dispatch_profile(self) -> np.ndarray:
+        if self.sampler == "weighted":
+            p = np.asarray(self.weights, np.float64)
+        elif self.sampler == "availability":
+            p = self._avail_np.copy()
+        else:                                   # all / uniform / round_robin
+            p = np.ones(self.m)
+        s = p.sum()
+        return p / s if s > 0 else np.full(self.m, 1.0 / self.m)
+
+    def _profile_cdf(self) -> np.ndarray:
+        if self._cdf is None:
+            self._cdf = np.cumsum(self._dispatch_profile())
+            self._cdf[-1] = 1.0
+        return self._cdf

@@ -26,9 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import engine, rounds
+from repro.core import engine, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
+from repro.fed.population import ClientPopulation
 
 PyTree = Any
 
@@ -74,6 +75,7 @@ class FederatedSimulation:
                                                     list]] = None,
                  k_schedule: Optional[np.ndarray] = None,
                  lam_schedule: Optional[Callable[[int], float]] = None,
+                 population: Optional[ClientPopulation] = None,
                  t_max: int = 10_000):
         self.fed = fed
         self.algo = get_algorithm(fed.algorithm, fed)
@@ -102,6 +104,20 @@ class FederatedSimulation:
         # a DeviceBatcher exposes a traceable in-scan sampler; host batchers
         # remain the pinned-equivalence compat mode (DESIGN.md §9)
         self._device_sampler = callable(getattr(batcher, "sample", None))
+        # partial participation (fed/population.py, DESIGN.md §10): each
+        # round runs a sampled cohort of C ≤ M clients; sampler "all" stays
+        # on the golden-pinned full-participation path above
+        self.population = (population if population is not None
+                           else ClientPopulation.from_config(
+                               fed, m=fed.n_clients,
+                               weights=np.asarray(self.weights)))
+        self._partial = (self.population is not None
+                         and not self.population.full_participation)
+        if (self.population is not None
+                and self.population.m != fed.n_clients):
+            raise ValueError(
+                f"population of {self.population.m} clients does not match "
+                f"fed.n_clients={fed.n_clients}")
 
     def _round_fn(self) -> Callable:
         """One jitted round for EVERY λ: the round function takes λ as a
@@ -123,6 +139,35 @@ class FederatedSimulation:
                 if self._device_sampler else None
             self._chunks[r] = engine.make_round_chunk(fn, r,
                                                       sample_fn=sample)
+        return self._chunks[r]
+
+    def _make_pop_round(self) -> Callable:
+        """The ONE cohort-round builder both population paths share — the
+        compat round and every chunk length compute the identical round."""
+        return stages.make_cohort_round(
+            self._loss_fn, self.algo, lr=self.fed.lr, k_max=self.k_max,
+            nu_decay=self.fed.cohort_nu_decay)
+
+    def _pop_round_fn(self) -> Callable:
+        """One jitted cohort round (partial participation, DESIGN.md §10)."""
+        if self._round is None:
+            self._round = jax.jit(self._make_pop_round())
+        return self._round
+
+    def _pop_chunk_fn(self, r: int) -> Callable:
+        """The r-round scanned cohort chunk: with a DeviceBatcher the cohort
+        draw AND the batch generation run inside the scan (O(C) memory);
+        host batchers feed precomputed (r, C, …) cohort tensors."""
+        if r not in self._chunks:
+            fn = self._make_pop_round()
+            pop, k_max = self.population, self.k_max
+            if self._device_sampler:
+                self._chunks[r] = engine.make_population_chunk(
+                    fn, r, cohort_fn=pop.cohort_and_weights,
+                    sample_fn=lambda t, ids: self.batcher.sample_cohort(
+                        t, ids, k_max))
+            else:
+                self._chunks[r] = engine.make_population_chunk(fn, r)
         return self._chunks[r]
 
     def _lam(self, t: int) -> float:
@@ -177,6 +222,64 @@ class FederatedSimulation:
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
 
+    # -- partial-participation execution (fed/population.py, DESIGN.md §10) --
+
+    def _run_pop_round(self, t: int, hist: History) -> None:
+        """chunk_rounds=1 cohort path: cohort drawn on host (identical to
+        the in-scan draw — same jax.random function of (seed, t))."""
+        lam = self._lam(t)
+        fn = self._pop_round_fn()
+        ids, cw = self.population.host_cohort(t)
+        k_row = np.asarray(self.k_schedule[t % len(self.k_schedule)])
+        if self._device_sampler:
+            batches = self.batcher.sample_cohort(
+                jnp.int32(t), jnp.asarray(ids, jnp.int32), self.k_max)
+        else:
+            batches = self.batcher.cohort_batches(t, ids, self.k_max)
+        t0 = time.perf_counter()
+        self.state, metrics = fn(self.state, batches,
+                                 jnp.asarray(ids, jnp.int32),
+                                 jnp.asarray(k_row[ids], jnp.int32),
+                                 jnp.asarray(cw), jnp.float32(lam))
+        jax.block_until_ready(self.state)
+        hist.wall.append(time.perf_counter() - t0)
+        hist.loss.append(float(metrics["loss"]))
+        hist.kbar.append(float(metrics["kbar"]))
+        hist.mass.append(float(metrics["mass"]))
+
+    def _run_pop_chunk(self, t0: int, r: int, hist: History) -> None:
+        chunk_fn = self._pop_chunk_fn(r)
+        L = len(self.k_schedule)
+        lams = jnp.asarray([self._lam(t0 + j) for j in range(r)],
+                           jnp.float32)
+        if self._device_sampler:
+            # cohort draw + batch sampling both happen inside the scan; the
+            # host ships only the (r,) round indices and (r, M) K rows
+            ts = jnp.arange(t0, t0 + r, dtype=jnp.int32)
+            k_rows = jnp.asarray(np.stack(
+                [np.asarray(self.k_schedule[(t0 + j) % L])
+                 for j in range(r)]).astype(np.int32))
+            args = (ts, k_rows, lams)
+        else:
+            drawn = [self.population.host_cohort(t0 + j) for j in range(r)]
+            cohorts = np.stack([ids for ids, _ in drawn])
+            cws = np.stack([w for _, w in drawn])
+            ks = np.stack(
+                [np.asarray(self.k_schedule[(t0 + j) % L])[cohorts[j]]
+                 for j in range(r)]).astype(np.int32)
+            batches = self.batcher.chunk_cohort_batches(t0, cohorts,
+                                                        self.k_max)
+            args = (batches, jnp.asarray(cohorts, jnp.int32),
+                    jnp.asarray(ks), jnp.asarray(cws), lams)
+        tic = time.perf_counter()
+        self.state, metrics = chunk_fn(self.state, *args)
+        jax.block_until_ready(self.state)
+        dt = time.perf_counter() - tic
+        hist.loss.extend(np.asarray(metrics["loss"], np.float64).tolist())
+        hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
+        hist.mass.extend(np.asarray(metrics["mass"], np.float64).tolist())
+        hist.wall.extend([dt / r] * r)
+
     def run(self, t_rounds: int, eval_every: int = 1,
             verbose: bool = False,
             chunk_rounds: Optional[int] = None) -> History:
@@ -200,7 +303,11 @@ class FederatedSimulation:
             r = min(chunk, t_rounds - t)
             if self.eval_fn is not None or self.eval_per_client is not None:
                 r = min(r, eval_every - t % eval_every)
-            if r == 1:
+            if self._partial and r == 1:
+                self._run_pop_round(t, hist)
+            elif self._partial:
+                self._run_pop_chunk(t, r, hist)
+            elif r == 1:
                 self._run_round(t, hist)
             else:
                 self._run_chunk(t, r, hist)

@@ -176,6 +176,22 @@ def _client_batch(cfg: ModelConfig, b: int, s: int, *, labels: bool) -> dict:
     return out
 
 
+def _batch_pspecs(batches: PyTree, mesh) -> PyTree:
+    """(M|C, k, B, …) batch sharding: client dim over the data axes; the 2d
+    mesh variant additionally shards the per-client microbatch dim over the
+    "batch" axis (§Perf #4)."""
+    cl = data_axes(mesh)
+    has_batch = "batch" in mesh.axis_names
+
+    def _bspec(x):
+        spec = [cl if cl else None] + [None] * (x.ndim - 1)
+        if has_batch and x.ndim >= 3 and x.shape[2] % mesh.shape["batch"] == 0:
+            spec[2] = "batch"
+        return P(*spec)
+
+    return jax.tree.map(_bspec, batches)
+
+
 def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, algo: Algorithm,
                 k_max: int = 4) -> dict:
     """Round inputs: state, batches (M, k_max, B_local, …), k_steps, weights."""
@@ -187,16 +203,7 @@ def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, algo: Algorithm,
         lambda x: _sds((m, k_max) + x.shape, x.dtype), micro)
     state = abstract_state(cfg, algo, m)
 
-    cl = data_axes(mesh)
-    # 2d mesh variant: microbatch dim (M, k, B, …) additionally sharded over
-    # the per-client "batch" axis (§Perf #4)
-    has_batch = "batch" in mesh.axis_names
-    def _bspec(x):
-        spec = [cl if cl else None] + [None] * (x.ndim - 1)
-        if has_batch and x.ndim >= 3 and x.shape[2] % mesh.shape["batch"] == 0:
-            spec[2] = "batch"
-        return P(*spec)
-    batch_ps = jax.tree.map(_bspec, batches)
+    batch_ps = _batch_pspecs(batches, mesh)
     specs = {
         "state": state,
         "batches": batches,
@@ -210,6 +217,55 @@ def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, algo: Algorithm,
         "weights": P(),
     }
     return {"specs": specs, "pspecs": pspecs, "m": m, "b_local": b_local}
+
+
+def population_train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                           algo: Algorithm, m_population: int,
+                           k_max: int = 4) -> dict:
+    """Cohort-round inputs at population scale (DESIGN.md §10).
+
+    The mesh's data slots host the COHORT (C = n_clients(mesh)); the server
+    state is POPULATION-sized — ``nu_i`` carries ``m_population`` rows,
+    row-sharded over the data axes (each data slice owns M/dsize clients'
+    calibration rows), while batches/cohort/k/cweights are cohort-sized.
+    ``m_population`` must be a multiple of the data-parallel size for the
+    row sharding to divide.
+    """
+    m = n_clients(mesh)
+    if m_population < m:
+        raise ValueError(f"population {m_population} smaller than the "
+                         f"mesh cohort {m}")
+    dsize = 1
+    for a in data_axes(mesh):
+        dsize *= mesh.shape[a]
+    if dsize > 1 and m_population % dsize:
+        raise ValueError(
+            f"m_population={m_population} must divide over the data-"
+            f"parallel size {dsize} for the ν⁽ⁱ⁾ row sharding")
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b_local = shape.global_batch // m
+    micro = _client_batch(cfg, b_local, shape.seq_len, labels=True)
+    batches = jax.tree.map(
+        lambda x: _sds((m, k_max) + x.shape, x.dtype), micro)
+    state = abstract_state(cfg, algo, m_population)
+
+    batch_ps = _batch_pspecs(batches, mesh)
+    specs = {
+        "state": state,
+        "batches": batches,
+        "cohort": _sds((m,), jnp.int32),
+        "k_steps": _sds((m,), jnp.int32),
+        "cweights": _sds((m,), jnp.float32),
+    }
+    pspecs = {
+        "state": state_pspecs(state, mesh),
+        "batches": batch_ps,
+        "cohort": P(),
+        "k_steps": P(),
+        "cweights": P(),
+    }
+    return {"specs": specs, "pspecs": pspecs, "m": m,
+            "m_population": m_population, "b_local": b_local}
 
 
 # ---------------------------------------------------------------------------

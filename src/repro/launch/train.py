@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
-from repro.core import engine, rounds
+from repro.core import engine, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.dist import set_mesh_rules, use_mesh
 from repro.launch import specs as specs_lib
@@ -94,6 +94,53 @@ def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh, fed: FedConfig,
         s = bundle["specs"]
         lowered = jitted.lower(s["state"], s["batches"], s["k_steps"],
                                s["weights"])
+    return lowered, bundle
+
+
+def build_population_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                           fed: FedConfig, *, m_population: int,
+                           k_max: int = 4):
+    """The SPMD cohort round at population scale (DESIGN.md §10).
+
+    The mesh's data slots host a cohort of C = n_clients(mesh) sampled
+    clients; the calibration state ``nu_i`` keeps ``m_population`` rows,
+    row-sharded over the data axes.  The per-round cohort gather / scatter
+    of those rows lowers to collectives between the cohort layout and the
+    population row sharding.  Returns ``(jitted_round_fn, spec_bundle)``
+    with ``round_fn(state, batches, cohort, k_steps, cweights)`` — λ is
+    baked in as ``algo.lam`` (the in_shardings cover exactly these five
+    arguments).  Call under ``with mesh:``.
+    """
+    algo = get_algorithm(fed.algorithm, fed)
+    set_mesh_rules(mesh, mesh_rules(mesh, kind="train"))
+    loss_fn = functools.partial(lm_loss, cfg=cfg)
+    round_fn = stages.make_cohort_round(
+        lambda p, b: loss_fn(p, b), algo, lr=fed.lr, k_max=k_max,
+        nu_decay=fed.cohort_nu_decay,
+        spmd_axis_name=data_axes(mesh) or None,
+        param_constraint=make_param_constraint(mesh))
+    bundle = specs_lib.population_train_specs(cfg, shape, mesh, algo,
+                                              m_population, k_max=k_max)
+    sh = lambda tree: specs_lib.to_shardings(tree, mesh)
+    ps = bundle["pspecs"]
+    jitted = jax.jit(
+        round_fn,
+        in_shardings=(sh(ps["state"]), sh(ps["batches"]), sh(ps["cohort"]),
+                      sh(ps["k_steps"]), sh(ps["cweights"])),
+        out_shardings=(sh(ps["state"]), None),
+    )
+    return jitted, bundle
+
+
+def lower_population(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     fed: FedConfig, *, m_population: int, k_max: int = 4):
+    """.lower() the population cohort round on ShapeDtypeStructs."""
+    with use_mesh(mesh):
+        jitted, bundle = build_population_round(
+            cfg, shape, mesh, fed, m_population=m_population, k_max=k_max)
+        s = bundle["specs"]
+        lowered = jitted.lower(s["state"], s["batches"], s["cohort"],
+                               s["k_steps"], s["cweights"])
     return lowered, bundle
 
 

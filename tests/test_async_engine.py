@@ -52,6 +52,64 @@ def test_staleness_monotone_nonincreasing(mode):
     assert np.all(s > 0)
 
 
+def test_staleness_hinge_boundary():
+    """τ exactly at the hinge budget b is still undiscounted; one past it
+    starts the harmonic decay — the off-by-one FedAsync §5 gets wrong in
+    half its reimplementations."""
+    for b in (0, 1, 4):
+        assert staleness_weight(b, "hinge", a=0.5, b=b) == 1.0
+        assert staleness_weight(b + 1, "hinge", a=0.5, b=b) \
+            == pytest.approx(1.0 / 1.5)
+
+
+def test_staleness_large_tau_asymptotics():
+    """Large τ: poly follows (1+τ)^-a exactly; hinge follows 1/(a(τ−b)+1);
+    both stay strictly positive (a zero weight would delete the report
+    instead of discounting it)."""
+    tau = np.array([1e3, 1e6])
+    np.testing.assert_allclose(staleness_weight(tau, "poly", a=0.5),
+                               (1.0 + tau) ** -0.5, rtol=1e-12)
+    np.testing.assert_allclose(
+        staleness_weight(tau, "hinge", a=0.5, b=4),
+        1.0 / (1.0 + 0.5 * (tau - 4)), rtol=1e-12)
+    for mode in ("constant", "hinge", "poly"):
+        assert np.all(staleness_weight(tau, mode, a=0.5, b=4) > 0)
+
+
+def test_staleness_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        staleness_weight(3, "exponential")
+
+
+def test_history_mass_tracks_buffer_mass():
+    """History.mass records Σ w̃ per server update: with buffer = M, equal
+    speeds and no discount it is exactly the total weight mass 1 (the
+    synchronous reduction); with a harsh poly discount and staleness it
+    drops strictly below the undiscounted Σ ω of the same buffer."""
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    params = {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+    ks = np.full((4, M), 2, np.int32)
+    fed = FedConfig(algorithm="fedavg", n_clients=M, lr=0.05,
+                    buffer_size=M, speed_dist="fixed")
+    sim = BufferedAsyncSimulation(lr_loss, params, fed,
+                                  FederatedBatcher(data, parts, 10),
+                                  k_schedule=ks)
+    hist = sim.run(3)
+    assert len(hist.mass) == 3
+    np.testing.assert_allclose(hist.mass, 1.0, rtol=1e-5)
+
+    fed_d = FedConfig(algorithm="fedavg", n_clients=M, lr=0.05,
+                      buffer_size=3, staleness="poly", staleness_a=2.0,
+                      speed_dist="lognormal", speed_sigma=1.0)
+    sim_d = BufferedAsyncSimulation(lr_loss, params, fed_d,
+                                    FederatedBatcher(data, parts, 10),
+                                    k_schedule=ks)
+    hist_d = sim_d.run(8)
+    assert len(hist_d.mass) == 8
+    assert np.mean(hist_d.mass) < 3.0 / M       # discounted below Σω ≈ 3/M
+
+
 # ---------------------------------------------------------------------------
 # client wall-clock model
 # ---------------------------------------------------------------------------

@@ -1,0 +1,41 @@
+"""benchmarks/run.py CLI: --only must fail fast on unknown names, listing
+the valid modules, instead of silently running nothing."""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.run import MODULES, parse_only  # noqa: E402
+
+
+def test_default_selects_every_module():
+    assert parse_only(None) == list(MODULES)
+
+
+def test_subset_preserves_order_and_dedupes():
+    assert parse_only("engine,thm1,engine") == ["engine", "thm1"]
+
+
+def test_whitespace_tolerated():
+    assert parse_only(" engine , population ") == ["engine", "population"]
+
+
+def test_unknown_name_fails_fast_listing_valid():
+    with pytest.raises(SystemExit) as e:
+        parse_only("engine,typo_bench")
+    msg = str(e.value)
+    assert "typo_bench" in msg
+    for name in MODULES:
+        assert name in msg
+
+
+def test_empty_selection_fails_fast():
+    with pytest.raises(SystemExit) as e:
+        parse_only(" , ,")
+    assert "selects nothing" in str(e.value)
+
+
+def test_population_bench_registered():
+    assert "population" in MODULES

@@ -87,6 +87,27 @@ def test_serve_specs_decode_vs_long():
     assert has_data_on_seq(lng["cache_ps"])
 
 
+def test_population_train_specs_shapes():
+    """Population cohort round (DESIGN.md §10): batches/cohort/k/cweights
+    are cohort-sized (C = mesh clients) while nu_i keeps M_pop rows,
+    row-sharded over the data axes."""
+    cfg = specs_lib.bf16_config(get_arch("llama3-8b"))
+    b = specs_lib.population_train_specs(cfg, SHAPES["train_4k"], MESH,
+                                         ALGO, m_population=4096, k_max=4)
+    assert b["m"] == 16 and b["m_population"] == 4096
+    assert b["specs"]["batches"]["tokens"].shape == (16, 4, 16, 4096)
+    assert b["specs"]["cohort"].shape == (16,)
+    assert b["specs"]["cweights"].shape == (16,)
+    # population-sized calibration state: M_pop rows, data-sharded
+    nui_embed = b["specs"]["state"]["nu_i"]["embed"]
+    assert nui_embed.shape[0] == 4096
+    ps = b["pspecs"]["state"]["nu_i"]["embed"]
+    assert ps[0] in ("data", ("data",))
+    with pytest.raises(ValueError):
+        specs_lib.population_train_specs(cfg, SHAPES["train_4k"], MESH,
+                                         ALGO, m_population=8, k_max=4)
+
+
 def test_abstract_params_no_allocation():
     cfg = specs_lib.bf16_config(get_arch("qwen1.5-32b"))
     params = specs_lib.abstract_params(cfg)
