@@ -4,9 +4,18 @@ On this CPU container Pallas runs in interpret mode (not representative),
 so we benchmark the XLA-fused jnp oracle vs an intentionally UNFUSED
 3-pass variant to quantify the fusion win the Pallas kernel locks in on
 TPU, and report the analytic HBM-traffic model (bytes moved per element).
+
+The flat-path rows benchmark the calibrated-update ops exactly as the
+flat training layout invokes them (core/flat.py, DESIGN.md §11): one
+fused launch over a lane-padded (rows, 128·k) buffer — plain and prox
+variants — reporting effective GB/s of the 3-read/1-write (4R/1W prox)
+streaming pattern.  ``BENCH_kernels.json`` at the repo root is the
+tracked artifact (CI uploads it).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -15,6 +24,8 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.kernels.calibrated_update import ref as cu_ref
 from repro.kernels.flash_attention import ref as fa_ref
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 N = 4_000_000
 
@@ -42,22 +53,71 @@ def _unfused(x, g, c):
     return x - 0.01 * s2
 
 
-def run(quick: bool = False) -> list[tuple]:
+@jax.jit
+def _flat_2d(x, g, c):
+    """The flat training hot path: one fused launch on (rows, 128)."""
+    return cu_ref.calibrated_update(x, g, c, 0.01, 0.5)
+
+
+@jax.jit
+def _flat_prox_2d(x, g, c, x0):
+    return cu_ref.calibrated_update_prox(x, g, c, x0, 0.01, 0.5, 0.1)
+
+
+def run(quick: bool = False) -> tuple[list[tuple], dict]:
     n = N // 8 if quick else N
     key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 3)
-    x, g, c = (jax.random.normal(k, (n,), jnp.float32) for k in ks)
+    ks = jax.random.split(key, 4)
+    x, g, c = (jax.random.normal(k, (n,), jnp.float32) for k in ks[:3])
     t_fused = _timeit(_fused, x, g, c)
     t_unfused = _timeit(_unfused, x, g, c)
+    report = {
+        "calibrated_update": {
+            "n_elements": n,
+            "fused_us": t_fused * 1e6,
+            "unfused_us": t_unfused * 1e6,
+            "fusion_speedup": t_unfused / t_fused,
+            # analytic HBM model (bytes/element): fused 3R+1W, unfused 7R+3W
+            "bytes_per_elem_fused": 16,
+            "bytes_per_elem_unfused": 40,
+        },
+    }
     rows = [
         ("kernel", "calibrated_update_fused_us", round(t_fused * 1e6, 1)),
         ("kernel", "calibrated_update_unfused_us",
          round(t_unfused * 1e6, 1)),
         ("kernel", "fusion_speedup", round(t_unfused / t_fused, 3)),
-        # analytic HBM model (bytes/element): fused 3R+1W vs unfused 7R+3W
         ("kernel", "bytes_per_elem_fused", 16),
         ("kernel", "bytes_per_elem_unfused", 40),
     ]
+
+    # flat-path shape: the lane-padded (rows, 128) matrix core/flat.py
+    # streams through one launch per local step
+    rows2d = n // 128
+    n2d = rows2d * 128
+    xm, gm, cm, x0m = (v[:n2d].reshape(rows2d, 128) for v in
+                       (x, g, c, jax.random.normal(ks[3], (n,),
+                                                   jnp.float32)))
+    t_flat = _timeit(_flat_2d, xm, gm, cm)
+    t_prox = _timeit(_flat_prox_2d, xm, gm, cm, x0m)
+    gbps = n2d * 16 / t_flat / 1e9
+    gbps_prox = n2d * 20 / t_prox / 1e9
+    report["flat_path"] = {
+        "rows": rows2d, "lanes": 128,
+        "calibrated_update_2d_us": t_flat * 1e6,
+        "calibrated_update_2d_gbps": gbps,
+        "calibrated_update_prox_2d_us": t_prox * 1e6,
+        "calibrated_update_prox_2d_gbps": gbps_prox,
+    }
+    rows += [
+        ("kernel", "flat_calibrated_update_2d_us", round(t_flat * 1e6, 1)),
+        ("kernel", "flat_calibrated_update_2d_gbps", round(gbps, 2)),
+        ("kernel", "flat_calibrated_update_prox_2d_us",
+         round(t_prox * 1e6, 1)),
+        ("kernel", "flat_calibrated_update_prox_2d_gbps",
+         round(gbps_prox, 2)),
+    ]
+
     B, S, H, D = (1, 256, 4, 64) if quick else (2, 512, 8, 64)
     q = jax.random.normal(ks[0], (B, S, H, D))
     k = jax.random.normal(ks[1], (B, S, H, D))
@@ -65,11 +125,23 @@ def run(quick: bool = False) -> list[tuple]:
     att = jax.jit(lambda a, b, c2: fa_ref.attention(a, b, c2))
     t_att = _timeit(att, q, k, v, reps=5)
     rows.append(("kernel", "ref_attention_us", round(t_att * 1e6, 1)))
-    return rows
+    report["ref_attention_us"] = t_att * 1e6
+    report["meta"] = {
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "note": "CPU container: jnp-oracle timings; the Pallas kernels "
+                "run interpret-mode here and real on TPU",
+    }
+    return rows, report
 
 
 def main(quick: bool = False) -> None:
-    emit(run(quick), ("bench", "metric", "value"))
+    rows, report = run(quick)
+    emit(rows, ("bench", "metric", "value"))
+    out = ROOT / "BENCH_kernels.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

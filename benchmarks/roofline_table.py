@@ -1,5 +1,11 @@
 """§Roofline table: read the dry-run sweep JSONL and print the three-term
-roofline per (arch × shape × mesh) with the dominant bottleneck."""
+roofline per (arch × shape × mesh) with the dominant bottleneck.
+
+The ``layout`` section compiles the benchmark-task round in BOTH parameter
+layouts (tree vs flat single-buffer, DESIGN.md §11) on this host and
+reports the flat round's memory/collective bytes and HLO op count next to
+the tree round's — the layout win at the compiler level, deterministic
+where wall-clock on this shared-core container is not."""
 from __future__ import annotations
 
 import json
@@ -48,6 +54,59 @@ def run(quick: bool = False) -> list[tuple]:
     return rows
 
 
+def layout_rows(quick: bool = False) -> list[tuple]:
+    """Compile the lr/mlp round in both layouts, compare HLO bytes/ops."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import make_task
+    from repro.configs.base import FedConfig
+    from repro.core import flat as flat_lib, rounds
+    from repro.core.fedopt import get_algorithm
+    from repro.roofline import analysis
+
+    rows = []
+    for kind in ("lr",) if quick else ("lr", "mlp"):
+        task = make_task(kind, noniid=True, seed=0)
+        m = task.batcher.m
+        fed = FedConfig(algorithm="fedagrac", n_clients=m, k_mean=4,
+                        lr=task.lr, calibration_rate=0.5, weights="data")
+        algo = get_algorithm("fedagrac", fed)
+        spec = flat_lib.make_flat_spec(task.params)
+        batches = task.batcher.round_batches(0, 4)
+        ks = jnp.full((m,), 4, jnp.int32)
+        ws = jnp.asarray(task.batcher.weights)
+        lam = jnp.float32(0.5)
+        rl, ops = {}, {}
+        for layout in ("tree", "flat"):
+            if layout == "flat":
+                fn = flat_lib.make_flat_round(spec, task.loss_fn, algo,
+                                              lr=task.lr, k_max=4)
+                st = flat_lib.flatten_state(
+                    spec, rounds.init_state(task.params, m, algo))
+            else:
+                fn = rounds.make_round(task.loss_fn, algo, lr=task.lr,
+                                       k_max=4)
+                st = rounds.init_state(task.params, m, algo)
+            compiled = jax.jit(fn).lower(st, batches, ks, ws, lam).compile()
+            hlo = compiled.as_text()
+            rl[layout] = analysis.from_compiled(compiled, chips=1,
+                                                hlo_text=hlo)
+            ops[layout] = analysis.hlo_op_count(hlo)
+        cmp = analysis.layout_comparison(rl["tree"], rl["flat"])
+        for layout in ("tree", "flat"):
+            rows.append((
+                "roofline", "layout", "cpu", kind, layout,
+                f"{rl[layout].bytes_accessed:.3e}",
+                f"{sum(rl[layout].coll_bytes.values()):.3e}",
+                ops[layout],
+                "1.000" if layout == "tree"
+                else f"{cmp['bytes_ratio']:.3f}",
+                "1.000" if layout == "tree"
+                else f"{ops['flat'] / ops['tree']:.3f}"))
+    return rows
+
+
 def main(quick: bool = False) -> None:
     rows = run(quick)
     hdr = ("bench", "source", "mesh", "arch", "shape", "status",
@@ -60,6 +119,11 @@ def main(quick: bool = False) -> None:
         print("# no dry-run results found — run "
               "`python -m repro.launch.dryrun --all --out "
               "results/dryrun_single_pod.jsonl` first")
+    hdr2 = ("bench", "source", "backend", "task", "layout", "hlo_bytes",
+            "collective_bytes", "hlo_ops", "bytes_vs_tree", "ops_vs_tree")
+    print(",".join(hdr2))
+    for row in layout_rows(quick):
+        print(",".join(str(x) for x in row))
 
 
 if __name__ == "__main__":

@@ -251,6 +251,13 @@ class FedConfig:
                             "round_robin"] = "all"
     availability: float = 1.0              # mean client up-probability
     cohort_nu_decay: float = 0.0           # stale ν⁽ⁱ⁾ decay toward ν per round
+    # -- parameter layout (core/flat.py, DESIGN.md §11) -----------------------
+    # "tree" runs the per-leaf layered round; "flat" ravels the model pytree
+    # into one lane-padded (P,) buffer (clients/ν⁽ⁱ⁾: (M, P) rows) and runs
+    # the whole round on flat state — the client step calls the fused Pallas
+    # calibrated-update kernels, every aggregator/server op is a single
+    # (M, P)-row einsum, and the pytree materializes only at the loss.
+    param_layout: Literal["tree", "flat"] = "tree"
 
 
 def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 128,

@@ -17,6 +17,11 @@ With ``sample_fn`` (a traceable ``t -> batches`` sampler, e.g.
 ``DeviceBatcher.sample``), batch *generation* also moves inside the scan:
 the stacked-batches input degenerates to the ``(R,)`` round indices and the
 chunk reads no host data at all.
+
+The chunk is LAYOUT-agnostic: ``state`` may be the per-leaf tree round
+state or the flat single-buffer state of core/flat.py (DESIGN.md §11) —
+donation then reuses one (P,)/(M, P) buffer per state entry across chunk
+calls, the cheapest possible carry (no per-leaf buffer bookkeeping).
 """
 from __future__ import annotations
 

@@ -1,0 +1,463 @@
+"""Flat-parameter execution: single-buffer rounds (DESIGN.md §11).
+
+The layered round (core/stages.py) runs every elementwise stage as a
+``jax.tree.map`` chain — one XLA op group *per leaf* for the local update,
+the aggregation einsum, the orientation recovery and the server step.  At
+paper scale (small leaves, many of them) the round is op-count-bound, not
+FLOP-bound, and the fused Pallas calibrated-update kernels
+(kernels/calibrated_update/) were dead code in training.
+
+This module collapses the model pytree to ONE contiguous lane-padded
+buffer and runs the *entire* round on flat state:
+
+* server vectors (params, ν, server_m/v) are ``(P,)`` buffers, per-client
+  state (ν⁽ⁱ⁾, round-local x⁽ⁱ⁾/g₀⁽ⁱ⁾) are ``(M, P)`` matrices, with
+  ``P = ceil(n / 128) · 128`` so the matrices feed the Pallas kernels
+  directly (``kernel.LANES`` lane padding, zeros in the tail — every stage
+  below is padding-preserving, so the tail stays exactly zero);
+* the client k-step scan calls ``calibrated_update_2d`` /
+  ``calibrated_update_prox_2d`` once per local step on the whole ``(M, P)``
+  matrix — one fused launch instead of ``num_leaves`` tree_map dispatches —
+  with the K_i masking and ν/g₀ accumulation as flat row ops;
+* aggregation, orientation, ν mass-mix and the server optimizer REUSE the
+  stage registries verbatim: the stage functions are pytree-polymorphic
+  (``jax.tree.map`` over a bare array is the identity traversal), so a
+  ``(M, P)`` matrix flows through ``AGGREGATORS`` / ``SELECTORS`` /
+  ``SERVER_OPTIMIZERS`` as a one-leaf tree and every per-leaf einsum
+  becomes a single ``(M, P)``-row einsum;
+* the pytree is materialized ONLY at the ``value_and_grad`` loss boundary
+  (``unravel`` = static slices + reshapes, which XLA folds into the loss
+  computation) — gradients come back through the transpose as one flat
+  concatenation.
+
+Numerics: every stage performs the same elementwise arithmetic in the
+same order as the tree round, only on a different memory layout.  The
+agreement is golden-pinned by tests/test_flat_layout.py for all nine
+algorithms on both engines at ULP scale: XLA contracts ``x − η·g`` into
+an FMA (one rounding) in one program layout and not the other — an
+LLVM fusion-context decision no jnp-level structuring controls — so f32
+trajectories agree to ~1 ulp per local step rather than bit-for-bit
+(verified: the tree path matches the fused-multiply-add reference, the
+flat path the two-rounding one; same asymmetry test_calibrated_update_2d
+documents).  In bf16 the kernels additionally accumulate in f32 and round
+once at the end where the tree path rounds per op — one bf16 ulp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stages
+from repro.core.fedopt import Algorithm
+from repro.core.tree_util import tree_wsum
+from repro.kernels.calibrated_update import ref as cu_ref
+from repro.kernels.calibrated_update.kernel import (LANES,
+                                                    calibrated_update_2d,
+                                                    calibrated_update_prox_2d)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# layout spec + ravel / unravel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static description of the tree ↔ flat-buffer bijection.
+
+    ``n`` true elements, lane-padded to ``p`` (multiple of kernel.LANES);
+    ``dtype`` is the shared buffer dtype — the common leaf dtype when the
+    tree is uniform (bf16 state stays bf16-sized), f32 otherwise.
+    """
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    treedef: Any
+    n: int
+    p: int
+    dtype: Any
+
+
+def make_flat_spec(tree: PyTree) -> FlatSpec:
+    """Build the spec from a concrete or abstract (eval_shape'd) tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(lv.shape) for lv in leaves)
+    dtypes = tuple(jnp.dtype(lv.dtype) for lv in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    n = int(sum(sizes))
+    p = -(-max(n, 1) // LANES) * LANES
+    dtype = dtypes[0] if all(d == dtypes[0] for d in dtypes) \
+        else jnp.dtype(jnp.float32)
+    return FlatSpec(shapes, dtypes, sizes, treedef, n, p, dtype)
+
+
+def ravel(spec: FlatSpec, tree: PyTree, client_dims: int = 0) -> jax.Array:
+    """Concat all leaves into ``(*lead, P)`` — ``client_dims`` leading axes
+    (client / round stacking) are preserved; the tail pads with zeros."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    lead = tuple(leaves[0].shape[:client_dims])
+    flat = jnp.concatenate(
+        [lv.astype(spec.dtype).reshape(lead + (-1,)) for lv in leaves],
+        axis=-1)
+    if spec.p != spec.n:
+        pad = jnp.zeros(lead + (spec.p - spec.n,), spec.dtype)
+        flat = jnp.concatenate([flat, pad], axis=-1)
+    return flat
+
+
+def ravel_rows(spec: FlatSpec, tree: PyTree) -> jax.Array:
+    """``ravel(spec, tree, client_dims=1)`` for the in-scan hot path,
+    built from a ``dynamic_update_slice`` chain instead of one
+    ``concatenate``: XLA:CPU fuses a multi-operand concat with its
+    producers into per-element multi-way index selection (~5× the memcpy
+    cost, measured on the round benchmark), while the DUS chain aliases
+    the output buffer and lowers to one region write per leaf."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    m = leaves[0].shape[0]
+    buf = jnp.zeros((m, spec.p), spec.dtype)
+    off = 0
+    for lv in leaves:
+        rows = lv.astype(spec.dtype).reshape(m, -1)
+        buf = jax.lax.dynamic_update_slice(buf, rows, (0, off))
+        off += rows.shape[1]
+    return buf
+
+
+def unravel(spec: FlatSpec, flat: jax.Array, client_dims: int = 0) -> PyTree:
+    """Inverse of ``ravel``: static slices + reshapes back to leaf dtypes
+    (free at the loss boundary — XLA fuses slices of a contiguous buffer)."""
+    lead = tuple(flat.shape[:client_dims])
+    leaves, off = [], 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        piece = jax.lax.slice_in_dim(flat, off, off + size, axis=-1)
+        leaves.append(piece.reshape(lead + shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def flatten_state(spec: FlatSpec, state: dict) -> dict:
+    """Tree round state → flat round state (same keys; params/ν/server
+    moments become (P,) buffers, ν⁽ⁱ⁾ an (M, P) matrix)."""
+    out = {}
+    for k, v in state.items():
+        if k == "round":
+            out[k] = v
+        elif k == "nu_i":
+            out[k] = ravel(spec, v, client_dims=1)
+        else:
+            out[k] = ravel(spec, v)
+    return out
+
+
+def unflatten_state(spec: FlatSpec, state: dict) -> dict:
+    out = {}
+    for k, v in state.items():
+        if k == "round":
+            out[k] = v
+        elif k == "nu_i":
+            out[k] = unravel(spec, v, client_dims=1)
+        else:
+            out[k] = unravel(spec, v)
+    return out
+
+
+def _use_pallas_default(use_pallas: Optional[bool]) -> bool:
+    """The Pallas kernels are the TPU hot path; elsewhere the flat update
+    runs the kernels package's jnp oracle — ONE fused XLA op on the flat
+    buffer, bitwise-equal to the kernel (same convention as
+    ``ops.calibrated_update_tree``; interpret-mode Pallas lowers to ~19
+    HLO ops of grid bookkeeping, pure overhead inside a scanned round)."""
+    return jax.default_backend() == "tpu" if use_pallas is None \
+        else use_pallas
+
+
+# ---------------------------------------------------------------------------
+# stage 1 (flat): the kernel-backed client k-step scan
+# ---------------------------------------------------------------------------
+
+def make_flat_client_update(spec: FlatSpec,
+                            loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                            algo: Algorithm, *, lr: float, k_max: int,
+                            track_nu: str = "delta",
+                            use_pallas: Optional[bool] = None,
+                            interpret: Optional[bool] = None,
+                            per_client_anchor: bool = False):
+    """Flat analogue of ``stages.make_client_update``: ``f(anchor, c_all,
+    batches, k_steps, lam) -> (x_i, g0_i, acc_i, loss0)`` on (M, P) rows.
+    ``c_all`` is ignored for algorithms without ν.
+
+    The k-scan runs directly on the (M, P) matrix and each local step is
+    ONE fused calibrated-update launch instead of ``num_leaves`` tree_map
+    dispatches — the Pallas kernel on TPU (``use_pallas``), its jnp
+    oracle with the K_i mask folded in as a per-row step size elsewhere
+    (interpret-mode Pallas lowers to ~19 HLO ops of grid bookkeeping,
+    pure overhead inside a scanned round).  The pytree exists only inside
+    the per-step ``value_and_grad`` (``unravel`` in, ``ravel_rows`` out).
+    """
+    use_pallas = _use_pallas_default(use_pallas)
+    needs_first = algo.selector in ("fedagrac", "first", "reverse")
+    uses_nu = algo.uses_nu
+    # the tree path adds the prox term into g BEFORE the g₀ select and the
+    # explicit-ν accumulation (stages.make_client_update); when either
+    # consumer exists the flat path must augment g the same way and use
+    # the PLAIN update — fusing prox into the kernel is only valid when
+    # nothing downstream reads the gradient (the FedProx-style baselines)
+    fuse_prox = bool(algo.prox_mu) and not (
+        needs_first or (track_nu == "explicit" and uses_nu))
+
+    if use_pallas:
+        interpret = (jax.default_backend() != "tpu" if interpret is None
+                     else interpret)
+
+        def masked_update(x, g, c, anchors, k, k_steps, lam):
+            if fuse_prox:
+                upd = calibrated_update_prox_2d(x, g, c, anchors, lr, lam,
+                                                algo.prox_mu,
+                                                interpret=interpret)
+            else:
+                upd = calibrated_update_2d(x, g, c, lr, lam,
+                                           interpret=interpret)
+            return jnp.where((k < k_steps)[:, None], upd, x)
+    else:
+        def masked_update(x, g, c, anchors, k, k_steps, lam):
+            """Oracle with the K_i mask FOLDED into the update as a
+            per-row step size η_i ∈ {η, 0}: an inactive row computes
+            x − 0·(…) = x exactly (finite operands), so the separate
+            (M, P) select — one extra full-state write per local step —
+            disappears.  Same f32-internal arithmetic as the kernel."""
+            eta = jnp.where(k < k_steps, jnp.float32(lr), 0.0)[:, None]
+            xf = x.astype(jnp.float32)
+            t = g.astype(jnp.float32)
+            if uses_nu:
+                t = t + lam * c.astype(jnp.float32)
+            if fuse_prox:
+                t = t + algo.prox_mu * (xf - anchors.astype(jnp.float32))
+            return (xf - eta * t).astype(x.dtype)
+
+    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def grad_fn(x: jax.Array, batch: PyTree):
+        """Per-client losses + FLAT gradient rows.  The pytree exists only
+        between these two lines; gradients re-enter the flat layout via
+        ``ravel_rows`` (one buffer, region writes) rather than by
+        differentiating through ``unravel`` — the transpose of a slice is
+        a pad, and a per-leaf pad+add chain on (M, P) costs more than the
+        whole fused update."""
+        loss, g = vgrad(unravel(spec, x, 1), batch)
+        return loss, ravel_rows(spec, g)
+
+    def run(anchor, c_all, batches, k_steps, lam):
+        m = k_steps.shape[0]
+        anchors = (anchor if per_client_anchor
+                   else jnp.broadcast_to(anchor[None], (m, spec.p)))
+        # λ multiplies a zero c for ν-free algorithms — bake λ = 0 so the
+        # kernel's λ·c term vanishes exactly (x − η(g + 0) ≡ x − ηg)
+        lam_k = lam if uses_nu else 0.0
+        c_k = (c_all if uses_nu
+               else jnp.zeros((m, spec.p), spec.dtype))
+        # (M, k_max, …) → (k_max, M, …): scan over local steps, whole
+        # client axis per step (same order the vmapped tree scan lowers to)
+        bk = jax.tree.map(lambda b: jnp.swapaxes(b, 0, 1), batches)
+
+        def step(carry, xs):
+            k, batch_k = xs
+            x, g0, nu_acc = carry
+            loss, g = grad_fn(x, batch_k)
+            if algo.prox_mu and not fuse_prox:
+                g = g + algo.prox_mu * (x - anchors)
+            x = masked_update(x, g, c_k, anchors, k, k_steps, lam_k)
+            if needs_first:
+                g0 = jnp.where(k == 0, g, g0)
+            if track_nu == "explicit" and uses_nu:
+                w = jnp.where(k < k_steps,
+                              1.0 / k_steps.astype(jnp.float32), 0.0)
+                nu_acc = nu_acc + w[:, None] * g
+            return (x, g0, nu_acc), loss
+
+        if k_max == 1:
+            # single-local-step rounds (FedSGD-style comm-bound regime):
+            # no scan and no g₀ select — every client runs exactly its
+            # one step (K_i ≥ 1), g₀ IS the only gradient
+            b0 = jax.tree.map(lambda b: b[0], bk)
+            loss, g = grad_fn(anchors, b0)
+            # unfused prox needs no augmentation here: x ≡ x₀ at k = 0, so
+            # the prox term μ(x − x₀) is exactly zero (as on the tree path)
+            x = masked_update(anchors, g, c_k, anchors, jnp.int32(0),
+                              k_steps, lam_k)
+            g0 = g if needs_first else jnp.zeros(())
+            if track_nu == "explicit" and uses_nu:
+                w = 1.0 / k_steps.astype(jnp.float32)    # same rounding as
+                nu_acc = w[:, None] * g                  # the in-scan path
+            else:
+                nu_acc = jnp.zeros(())
+            return x, g0, nu_acc, loss
+
+        g0_0 = (jnp.zeros((m, spec.p), spec.dtype) if needs_first
+                else jnp.zeros(()))
+        acc_0 = (jnp.zeros((m, spec.p), spec.dtype)
+                 if (track_nu == "explicit" and uses_nu) else jnp.zeros(()))
+        (x, g0, nu_acc), losses = jax.lax.scan(
+            step, (anchors, g0_0, acc_0), (jnp.arange(k_max), bk))
+        return x, g0, nu_acc, losses[0]
+
+    return run
+
+
+def _flat_transmit(spec: FlatSpec, algo: Algorithm, params0, x_i, g0_i,
+                   acc_i, c_all, kf, kbar, lr, lam, *,
+                   track_nu: str = "delta", quantize_transmit: bool = False,
+                   anchor_i=None):
+    """``stages.orientation_transmit`` on flat matrices.  The stage
+    functions are array-polymorphic so this is a thin wrapper — except
+    int8 fake-quantization, whose scale is per-client-per-LEAF: the flat
+    transmit round-trips through the tree there to keep the semantics."""
+    if quantize_transmit:
+        if track_nu == "explicit":
+            avg_g = acc_i
+        else:
+            avg_g = stages.recover_avg_grad(params0, x_i, c_all, kf, lr,
+                                            lam, anchor_i=anchor_i)
+        transmit = stages.SELECTORS[algo.selector](
+            g0_i, avg_g, stages.fast_mask(kf, kbar))
+        transmit = ravel_rows(
+            spec, stages.quantize_int8(unravel(spec, transmit, 1)))
+        return transmit, avg_g
+    return stages.orientation_transmit(
+        algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
+        track_nu=track_nu, anchor_i=anchor_i)
+
+
+# ---------------------------------------------------------------------------
+# composition: the flat synchronous round
+# ---------------------------------------------------------------------------
+
+def make_flat_round(spec: FlatSpec,
+                    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                    algo: Algorithm, *, lr: float, k_max: int,
+                    track_nu: str = "delta",
+                    quantize_transmit: bool = False,
+                    use_pallas: Optional[bool] = None,
+                    param_constraint: Optional[Callable[[jax.Array, int],
+                                                        jax.Array]] = None):
+    """Flat twin of ``stages.make_layered_round``: same signature
+    ``round_fn(state, batches, k_steps, weights, lam=None)``, state leaves
+    flat (``flatten_state``).  Aggregation / orientation / server-opt call
+    the SAME registry functions as the tree round — on one (M, P) leaf."""
+    client_update = make_flat_client_update(
+        spec, loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
+        use_pallas=use_pallas)
+    aggregate = stages.AGGREGATORS[algo.aggregator]
+
+    def constrain(arr, client_dims):
+        if param_constraint is None:
+            return arr
+        return param_constraint(arr, client_dims)
+
+    def round_fn(state: dict, batches: PyTree, k_steps: jax.Array,
+                 weights: jax.Array, lam=None):
+        if lam is None:
+            lam = algo.lam
+        params0 = state["params"]                          # (P,)
+        kbar = jnp.dot(weights, k_steps.astype(jnp.float32))
+
+        c_all = (state["nu"][None] - state["nu_i"]
+                 if algo.uses_nu else None)                # (M, P)
+
+        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+                                                k_steps, lam)
+        x_i = constrain(x_i, 1)
+        kf = k_steps.astype(jnp.float32)
+
+        new_params = aggregate(params0, x_i, kf, weights, kbar)
+        new_state = dict(state)
+        new_params = stages.server_update(algo, state, params0, new_params,
+                                          new_state)
+        new_params = constrain(new_params, 0)
+        new_state["params"] = new_params
+        new_state["round"] = state["round"] + 1
+
+        if algo.uses_nu:
+            transmit, avg_g = _flat_transmit(
+                spec, algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
+                lam, track_nu=track_nu,
+                quantize_transmit=quantize_transmit)
+            new_state["nu"] = constrain(tree_wsum(weights, transmit), 0)
+            new_state["nu_i"] = constrain(avg_g, 1)
+
+        metrics = {"loss": jnp.dot(weights, loss0), "kbar": kbar}
+        return new_state, metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# composition: the flat cohort round (partial participation)
+# ---------------------------------------------------------------------------
+
+def make_flat_cohort_round(spec: FlatSpec,
+                           loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                           algo: Algorithm, *, lr: float, k_max: int,
+                           nu_decay: float = 0.0,
+                           track_nu: str = "delta",
+                           quantize_transmit: bool = False,
+                           use_pallas: Optional[bool] = None,
+                           param_constraint: Optional[Callable] = None):
+    """Flat twin of ``stages.make_cohort_round``: the cohort's ν⁽ⁱ⁾ gather
+    and the post-round scatter are pure ROW indexing on the (M_pop, P)
+    matrix — no per-leaf gather chains (DESIGN.md §10, §11)."""
+    client_update = make_flat_client_update(
+        spec, loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
+        use_pallas=use_pallas)
+    aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
+
+    def constrain(arr, client_dims):
+        if param_constraint is None:
+            return arr
+        return param_constraint(arr, client_dims)
+
+    def round_fn(state: dict, batches: PyTree, cohort: jax.Array,
+                 k_steps: jax.Array, cweights: jax.Array, lam=None):
+        if lam is None:
+            lam = algo.lam
+        params0 = state["params"]
+        kf = k_steps.astype(jnp.float32)
+        mass = jnp.sum(cweights)
+        kbar = jnp.dot(cweights, kf) / mass
+
+        c_all = (state["nu"][None] - state["nu_i"][cohort]
+                 if algo.uses_nu else None)                # (C, P) rows
+
+        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+                                                k_steps, lam)
+        x_i = constrain(x_i, 1)
+
+        agg = aggregate(params0, params0[None], x_i, kf, cweights, kbar)
+        new_state = dict(state)
+        new_params = stages.server_update(algo, state, params0, agg,
+                                          new_state)
+        new_params = constrain(new_params, 0)
+        new_state["params"] = new_params
+        new_state["round"] = state["round"] + 1
+
+        if algo.uses_nu:
+            transmit, avg_g = _flat_transmit(
+                spec, algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
+                lam, track_nu=track_nu,
+                quantize_transmit=quantize_transmit)
+            contrib = tree_wsum(cweights, transmit)
+            new_nu = stages.nu_mass_mix(state["nu"], contrib, mass)
+            new_state["nu"] = constrain(new_nu, 0)
+            new_state["nu_i"] = constrain(
+                stages.scatter_nu_rows(state["nu_i"], new_nu, avg_g,
+                                       cohort, nu_decay), 1)
+
+        metrics = {"loss": jnp.dot(cweights, loss0) / mass, "kbar": kbar,
+                   "mass": mass}
+        return new_state, metrics
+
+    return round_fn

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import rounds, stages
+from repro.core import flat, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.core.tree_util import tree_wsum
 from repro.data.partition import gaussian_k_schedule
@@ -150,6 +150,19 @@ class BufferedAsyncSimulation:
         # private copy: the scanned chunk donates its carry (state + anchor
         # buffers), which would delete a caller-owned params tree
         params = jax.tree.map(jnp.array, params)
+        # param_layout="flat" (core/flat.py, DESIGN.md §11): state vectors
+        # and BOTH anchor buffers become flat (M+1, P) matrices, so the
+        # stale-anchor gather and the re-dispatch scatter are pure row
+        # indexing — the gather/scatter closures below are already
+        # array-polymorphic, only the client update swaps implementations
+        if fed.param_layout not in ("tree", "flat"):
+            raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
+                             f"choose 'tree' or 'flat'")
+        self.layout = fed.param_layout
+        self._spec = (flat.make_flat_spec(params)
+                      if self.layout == "flat" else None)
+        if self.layout == "flat":
+            params = flat.ravel(self._spec, params)
         self.state = rounds.init_state(params, m, self.algo)
         self.version = 0
         self._device_sampler = callable(getattr(batcher, "sample_row", None))
@@ -199,8 +212,14 @@ class BufferedAsyncSimulation:
         nu_decay = (self.fed.cohort_nu_decay
                     if self.population is not None
                     and not self.population.full_participation else 0.0)
-        client_update = stages.make_client_update(
-            self._loss_fn, algo, lr=lr, k_max=k_max, per_client_anchor=True)
+        if self.layout == "flat":
+            client_update = flat.make_flat_client_update(
+                self._spec, self._loss_fn, algo, lr=lr, k_max=k_max,
+                per_client_anchor=True)
+        else:
+            client_update = stages.make_client_update(
+                self._loss_fn, algo, lr=lr, k_max=k_max,
+                per_client_anchor=True)
         aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
 
         def body(carry, xs):
@@ -422,8 +441,7 @@ class BufferedAsyncSimulation:
             hist.staleness.extend(tau[sl].mean(axis=1).tolist())
             u += r
             if self.eval_fn is not None and u % eval_every == 0:
-                hist.metric.append(float(self.eval_fn(
-                    self.state["params"])))
+                hist.metric.append(float(self.eval_fn(self.params)))
             if verbose and (u % 10 < r or u == t_updates):
                 mtr = hist.metric[-1] if hist.metric else float("nan")
                 print(f"  update {u - 1:4d}  t={hist.sim_time[-1]:8.2f}  "
@@ -434,4 +452,7 @@ class BufferedAsyncSimulation:
 
     @property
     def params(self) -> PyTree:
+        """Current global model as a pytree (flat layout unravels)."""
+        if self.layout == "flat":
+            return flat.unravel(self._spec, self.state["params"])
         return self.state["params"]

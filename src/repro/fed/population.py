@@ -33,6 +33,12 @@ estimate of the full-participation direction Σ ω_i (x⁽ⁱ⁾ − x):
 The same w̃ feeds the orientation mass-mix  ν ← (1 − ρ) ν + (ρ/Σw̃)·Σ w̃ νᵢ
 (ρ = min(Σw̃, 1)), so the calibration direction stays an estimate of the
 population direction with non-participants represented by the previous ν.
+
+Samplers and weights are LAYOUT-agnostic: under ``param_layout="flat"``
+(core/flat.py, DESIGN.md §11) the population's ν⁽ⁱ⁾ store is one
+``(M, P)`` matrix, so the cohort gather and post-round scatter this
+module's draws index into become single-row operations instead of
+per-leaf gather chains.
 """
 from __future__ import annotations
 

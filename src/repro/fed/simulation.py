@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import engine, rounds, stages
+from repro.core import engine, flat, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
 from repro.fed.population import ClientPopulation
@@ -97,6 +97,18 @@ class FederatedSimulation:
         # scan (core/engine.py), which would delete a caller-owned ``params``
         # tree shared with other simulations
         params = jax.tree.map(jnp.array, params)
+        # param_layout="flat" (core/flat.py, DESIGN.md §11): the round state
+        # lives as one lane-padded (P,) buffer per vector (ν⁽ⁱ⁾: (M, P)) and
+        # the flat round twins plug into the SAME run loop — only the eval
+        # boundary (``self.params``) unravels back to the pytree
+        if fed.param_layout not in ("tree", "flat"):
+            raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
+                             f"choose 'tree' or 'flat'")
+        self.layout = fed.param_layout
+        self._spec = (flat.make_flat_spec(params)
+                      if self.layout == "flat" else None)
+        if self.layout == "flat":
+            params = flat.ravel(self._spec, params)
         self.state = rounds.init_state(params, fed.n_clients, self.algo)
         self._round: Optional[Callable] = None
         self._chunks: dict[int, Callable] = {}
@@ -119,22 +131,31 @@ class FederatedSimulation:
                 f"population of {self.population.m} clients does not match "
                 f"fed.n_clients={fed.n_clients}")
 
+    def _build_round(self) -> Callable:
+        """The ONE synchronous-round builder every execution path shares —
+        the tree round or (``param_layout="flat"``) its single-buffer twin;
+        both expose ``round_fn(state, batches, k_steps, weights, lam)``, so
+        the run loop below is layout-agnostic."""
+        if self.layout == "flat":
+            return flat.make_flat_round(
+                self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
+                k_max=self.k_max)
+        return rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
+                                 k_max=self.k_max)
+
     def _round_fn(self) -> Callable:
         """One jitted round for EVERY λ: the round function takes λ as a
         traced scalar argument, so ``lam_schedule`` never retraces (the old
         cache was keyed on the float λ — one fresh ``jax.jit`` trace per
         round under any non-constant schedule)."""
         if self._round is None:
-            fn = rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
-                                   k_max=self.k_max)
-            self._round = jax.jit(fn)
+            self._round = jax.jit(self._build_round())
         return self._round
 
     def _chunk_fn(self, r: int) -> Callable:
         """The r-round scanned chunk (cached per chunk length)."""
         if r not in self._chunks:
-            fn = rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
-                                   k_max=self.k_max)
+            fn = self._build_round()
             sample = (lambda t: self.batcher.sample(t, self.k_max)) \
                 if self._device_sampler else None
             self._chunks[r] = engine.make_round_chunk(fn, r,
@@ -144,6 +165,10 @@ class FederatedSimulation:
     def _make_pop_round(self) -> Callable:
         """The ONE cohort-round builder both population paths share — the
         compat round and every chunk length compute the identical round."""
+        if self.layout == "flat":
+            return flat.make_flat_cohort_round(
+                self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
+                k_max=self.k_max, nu_decay=self.fed.cohort_nu_decay)
         return stages.make_cohort_round(
             self._loss_fn, self.algo, lr=self.fed.lr, k_max=self.k_max,
             nu_decay=self.fed.cohort_nu_decay)
@@ -314,12 +339,11 @@ class FederatedSimulation:
             t += r
             if t % eval_every == 0:
                 if self.eval_fn is not None:
-                    hist.metric.append(float(self.eval_fn(
-                        self.state["params"])))
+                    hist.metric.append(float(self.eval_fn(self.params)))
                 if self.eval_per_client is not None:
                     hist.per_client.append(
                         [float(v) for v in
-                         self.eval_per_client(self.state["params"])])
+                         self.eval_per_client(self.params)])
             if verbose and (t % 10 < r or t == t_rounds):
                 m = hist.metric[-1] if hist.metric else float("nan")
                 print(f"  round {t - 1:4d}  loss={hist.loss[-1]:.4f}  "
@@ -328,6 +352,11 @@ class FederatedSimulation:
 
     @property
     def params(self) -> PyTree:
+        """Current global model as a pytree (flat layout unravels — the
+        only place the flat engine materializes the tree outside the
+        loss boundary)."""
+        if self.layout == "flat":
+            return flat.unravel(self._spec, self.state["params"])
         return self.state["params"]
 
 

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels.calibrated_update import ref
 from repro.kernels.calibrated_update.kernel import (LANES,
-                                                    calibrated_update_2d)
+                                                    calibrated_update_2d,
+                                                    calibrated_update_prox_2d)
 
 PyTree = Any
 
@@ -63,4 +64,24 @@ def calibrated_update_tree(x: PyTree, g: PyTree, c: PyTree, eta, lam, *,
     gm, _, _, _ = flatten_to_2d(g)
     cm, _, _, _ = flatten_to_2d(c)
     om = calibrated_update_2d(xm, gm, cm, eta, lam, interpret=interpret)
+    return unflatten_from_2d(om, metas, treedef, n)
+
+
+def calibrated_update_prox_tree(x: PyTree, g: PyTree, c: PyTree, x0: PyTree,
+                                eta, lam, mu, *, use_pallas: bool = True,
+                                interpret: bool | None = None) -> PyTree:
+    """FedProx variant fused over the whole pytree:
+    x ← x − η (g + λ c + μ (x − x₀))."""
+    if not use_pallas:
+        return jax.tree.map(
+            lambda xx, gg, cc, aa: ref.calibrated_update_prox(
+                xx, gg, cc, aa, eta, lam, mu), x, g, c, x0)
+    if interpret is None:
+        interpret = not _is_tpu()
+    xm, metas, treedef, n = flatten_to_2d(x)
+    gm, _, _, _ = flatten_to_2d(g)
+    cm, _, _, _ = flatten_to_2d(c)
+    am, _, _, _ = flatten_to_2d(x0)
+    om = calibrated_update_prox_2d(xm, gm, cm, am, eta, lam, mu,
+                                   interpret=interpret)
     return unflatten_from_2d(om, metas, treedef, n)

@@ -269,6 +269,76 @@ def population_train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 
 # ---------------------------------------------------------------------------
+# flat-layout round state (core/flat.py, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _flat_axis(mesh, p: int):
+    """The mesh axes the lane-padded flat parameter axis shards over —
+    the model axes when they divide P (P is a multiple of 128, so every
+    power-of-two tensor-parallel size ≤ 128 divides), else replicated."""
+    maxes = model_axes(mesh)
+    msize = 1
+    for a in maxes:
+        msize *= mesh.shape[a]
+    if msize <= 1 or p % msize:
+        return None
+    return maxes if len(maxes) > 1 else maxes[0]
+
+
+def flat_state_pspecs(state: PyTree, mesh, p: int) -> PyTree:
+    """Sharding for the FLAT round state: every (P,) server vector shards
+    its single axis over the model axes; the (M, P) ν⁽ⁱ⁾ matrix shards
+    client rows over the data axes and P over model — ONE rule instead of
+    a name-aware table, the layout payoff at the specs layer."""
+    fx = _flat_axis(mesh, p)
+    cl = data_axes(mesh)
+    cl = (cl if len(cl) > 1 else cl[0]) if cl else None
+    out = {}
+    for k, v in state.items():
+        if k == "round":
+            out[k] = P()
+        elif k == "nu_i":
+            out[k] = P(cl, fx)
+        else:
+            out[k] = P(fx)
+    return out
+
+
+def flat_train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     algo: Algorithm, k_max: int = 4) -> dict:
+    """``train_specs`` for ``param_layout="flat"``: same batch stand-ins,
+    but the round state collapses to (P,) / (M, P) buffers described by
+    ``core.flat.make_flat_spec`` of the abstract parameter tree."""
+    from repro.core import flat as flat_lib
+
+    m = n_clients(mesh)
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b_local = shape.global_batch // m
+    micro = _client_batch(cfg, b_local, shape.seq_len, labels=True)
+    batches = jax.tree.map(
+        lambda x: _sds((m, k_max) + x.shape, x.dtype), micro)
+    fspec = flat_lib.make_flat_spec(abstract_params(cfg))
+    state = jax.eval_shape(
+        lambda: rounds.init_state(jnp.zeros((fspec.p,), fspec.dtype), m,
+                                  algo))
+
+    specs = {
+        "state": state,
+        "batches": batches,
+        "k_steps": _sds((m,), jnp.int32),
+        "weights": _sds((m,), jnp.float32),
+    }
+    pspecs = {
+        "state": flat_state_pspecs(state, mesh, fspec.p),
+        "batches": _batch_pspecs(batches, mesh),
+        "k_steps": P(),
+        "weights": P(),
+    }
+    return {"specs": specs, "pspecs": pspecs, "m": m, "b_local": b_local,
+            "flat_spec": fspec}
+
+
+# ---------------------------------------------------------------------------
 # serve stand-ins (prefill / decode)
 # ---------------------------------------------------------------------------
 

@@ -194,10 +194,19 @@ def forward(params: Params, batch: dict, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """logits (..., V) fp-any; labels (...) int32."""
+    """logits (..., V) fp-any; labels (...) int32.
+
+    The label pick is a masked reduction, NOT ``take_along_axis``: XLA:CPU
+    lowers the 1-element gather to a SERIAL while loop over every (row,
+    label) pair — ~2.3 ms per round on the benchmark tasks, longer than
+    the entire k-step scan it feeds (found profiling the flat-layout
+    round, DESIGN.md §11).  The select+sum picks the identical value
+    (adding exact zeros), vectorized."""
     logits = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    v = logits.shape[-1]
+    mask = labels[..., None] == jnp.arange(v, dtype=labels.dtype)
+    ll = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
     return jnp.mean(lse - ll)
 
 

@@ -145,6 +145,36 @@ def from_compiled(compiled, chips: int, model_flops: float = 0.0,
     return rl
 
 
+def layout_comparison(tree: Roofline, flat: Roofline) -> dict:
+    """The flat-vs-tree layout win at the HLO level (DESIGN.md §11) —
+    deterministic, unlike wall-clock on a shared-core container: compare
+    the flat round's memory/collective bytes (and op count as a proxy for
+    dispatch/scheduling load) NEXT TO the tree round's.  Ratios < 1 mean
+    the single-buffer round moves fewer bytes / issues fewer ops for the
+    identical arithmetic."""
+    coll_t = sum(tree.coll_bytes.values())
+    coll_f = sum(flat.coll_bytes.values())
+    return {
+        "tree_bytes": tree.bytes_accessed,
+        "flat_bytes": flat.bytes_accessed,
+        "bytes_ratio": (flat.bytes_accessed / tree.bytes_accessed
+                        if tree.bytes_accessed else None),
+        "tree_collective_bytes": coll_t,
+        "flat_collective_bytes": coll_f,
+        "collective_ratio": coll_f / coll_t if coll_t else None,
+        "tree_t_memory_s": tree.t_memory,
+        "flat_t_memory_s": flat.t_memory,
+        "tree_t_collective_s": tree.t_collective,
+        "flat_t_collective_s": flat.t_collective,
+    }
+
+
+def hlo_op_count(hlo_text: str) -> int:
+    """Instruction count of the optimized module — the dispatch/scheduling
+    load proxy used by the layout comparison."""
+    return sum(1 for line in hlo_text.splitlines() if " = " in line)
+
+
 # ---------------------------------------------------------------------------
 # MODEL_FLOPS (6·N·D) helpers
 # ---------------------------------------------------------------------------

@@ -7,7 +7,8 @@ import pytest
 from repro.kernels.calibrated_update import ref as cu_ref
 from repro.kernels.calibrated_update.kernel import (calibrated_update_2d,
                                                     calibrated_update_prox_2d)
-from repro.kernels.calibrated_update.ops import (calibrated_update_tree,
+from repro.kernels.calibrated_update.ops import (calibrated_update_prox_tree,
+                                                 calibrated_update_tree,
                                                  flatten_to_2d,
                                                  unflatten_from_2d)
 from repro.kernels.flash_attention import ref as fa_ref
@@ -39,14 +40,72 @@ def test_calibrated_update_2d(rows, cols, dtype):
     assert got.dtype == x.dtype
 
 
-def test_calibrated_update_prox():
+@pytest.mark.parametrize("rows,cols", [(8, 128), (100, 128), (512, 256),
+                                       (1000, 384), (3, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_calibrated_update_prox_2d(rows, cols, dtype):
+    """The prox variant (FedProx baselines) against the jnp oracle — the
+    same shape/dtype sweep the plain kernel gets, incl. row counts that
+    are not a multiple of any block size and bf16 I/O."""
     keys = jax.random.split(jax.random.PRNGKey(1), 4)
-    x, g, c, x0 = (_rand(k, (64, 128), jnp.float32) for k in keys)
+    x, g, c, x0 = (_rand(k, (rows, cols), dtype) for k in keys)
     got = calibrated_update_prox_2d(x, g, c, x0, 0.05, 0.5, 0.1,
                                     interpret=True)
     want = cu_ref.calibrated_update_prox(x, g, c, x0, 0.05, 0.5, 0.1)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
+    tol = 1e-5 if dtype == jnp.float32 else 2 ** -8
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == x.dtype
+
+
+def test_calibrated_update_prox_2d_traced_scalars_no_recompile():
+    """η/λ/μ are SMEM operands — changing them must not retrace."""
+    x = _rand(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    f = jax.jit(lambda e, l, m: calibrated_update_prox_2d(
+        x, x, x, 0.5 * x, e, l, m, interpret=True))
+    a = f(jnp.float32(0.1), jnp.float32(0.0), jnp.float32(0.0))
+    b = f(jnp.float32(0.2), jnp.float32(1.0), jnp.float32(0.3))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("sizes", [((7, 13), (5,), (2, 3, 4)),   # 110 → pad 18
+                                   ((128,),),                    # exact fit
+                                   ((129,), (63,))])             # 192 → pad 64
+def test_calibrated_update_prox_tree_padding_path(sizes):
+    """Ragged trees through ``flatten_to_2d``: the lane-padding tail must
+    not leak into any leaf of the prox update (non-multiple-of-LANES
+    element counts ⇒ a partially-padded last row)."""
+    def mk(key):
+        ks = jax.random.split(key, len(sizes))
+        return {f"l{i}": _rand(k, s, jnp.float32)
+                for i, (k, s) in enumerate(zip(ks, sizes))}
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    x, g, c, x0 = (mk(k) for k in keys)
+    got = calibrated_update_prox_tree(x, g, c, x0, 0.05, 0.5, 0.1,
+                                      interpret=True)
+    want = calibrated_update_prox_tree(x, g, c, x0, 0.05, 0.5, 0.1,
+                                       use_pallas=False)
+    for k in x:
+        assert got[k].shape == x[k].shape
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_calibrated_update_prox_tree_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    mk = lambda k: {"w": _rand(k, (33, 17), jnp.bfloat16),
+                    "b": _rand(k, (9,), jnp.bfloat16)}
+    x, g, c, x0 = (mk(k) for k in keys)
+    got = calibrated_update_prox_tree(x, g, c, x0, 0.05, 0.5, 0.1,
+                                      interpret=True)
+    want = calibrated_update_prox_tree(x, g, c, x0, 0.05, 0.5, 0.1,
+                                       use_pallas=False)
+    for k in x:
+        assert got[k].dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=2 ** -8, atol=2 ** -8)
 
 
 def test_calibrated_update_traced_scalars_no_recompile():

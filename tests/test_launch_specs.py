@@ -130,3 +130,36 @@ def test_every_arch_every_shape_specs_build(arch):
             specs_lib.train_specs(cfg, shape, MESH, ALGO, k_max=2)
         else:
             specs_lib.serve_specs(cfg, shape, MESH, kind=kind)
+
+
+def test_flat_train_specs_shard_flat_axis():
+    """Flat layout (core/flat.py, DESIGN.md §11): the round state collapses
+    to (P,) vectors / (M, P) client matrices — the P axis (lane-padded to a
+    multiple of 128) shards over the model axes with ONE rule, ν⁽ⁱ⁾ client
+    rows over the data axes."""
+    cfg = specs_lib.bf16_config(get_arch("llama3-8b"))
+    b = specs_lib.flat_train_specs(cfg, SHAPES["train_4k"], MESH, ALGO,
+                                   k_max=4)
+    fs = b["flat_spec"]
+    assert fs.p % 128 == 0 and fs.p >= fs.n
+    st = b["specs"]["state"]
+    assert st["params"].shape == (fs.p,)
+    assert st["nu"].shape == (fs.p,)
+    assert st["nu_i"].shape == (16, fs.p)
+    ps = b["pspecs"]["state"]
+    assert ps["params"] == P("model")
+    assert ps["nu"] == P("model")
+    assert ps["nu_i"][0] in ("data", ("data",)) and "model" in ps["nu_i"]
+    # batches are layout-independent (the loss boundary still sees them)
+    assert b["specs"]["batches"]["tokens"].shape == (16, 4, 16, 4096)
+
+
+def test_flat_state_pspecs_replicates_when_indivisible():
+    """A model size that does not divide the padded P leaves the flat axis
+    replicated instead of producing an invalid spec."""
+    mesh = FakeMesh({"data": 4, "model": 3})
+    state = {"params": jax.ShapeDtypeStruct((256,), jnp.float32),
+             "round": jax.ShapeDtypeStruct((), jnp.int32)}
+    ps = specs_lib.flat_state_pspecs(state, mesh, 256)
+    assert ps["params"] == P(None)
+    assert ps["round"] == P()
