@@ -1,0 +1,160 @@
+"""Survival table: algorithms under failure scenarios (DESIGN.md §12).
+
+Claim validated: the failure-scenario engine (fed/scenarios.py) turns
+device-model faults — mid-round dropout with partial-work recovery,
+adversarial straggler spikes, flaky-network latency bursts, correlated
+diurnal availability — into reproducible benchmark conditions, and the
+partial-work recovery rule (client contributes its k′-step prefix at
+delivered-fraction weight k′/K) keeps every algorithm convergent where a
+discard-on-failure server would lose the work entirely.  The table crosses
+algorithm × staleness-discount × scenario on the buffered-async engine
+(lognormal fleet, buffer = M/2) and reports final accuracy, server updates
+to the target, simulated seconds to the target, and the realized
+abort/dropped fraction.  Two survival checks:
+
+1. **Graceful degradation** — under every fault model each algorithm still
+   reaches the target; dropout and spikes cost updates (lost step mass),
+   flaky networks cost only simulated seconds (arrivals shift, work is
+   intact — the sync engine is bit-identical to baseline under flaky).
+2. **Calibration survives faults** — FedaGrac's final accuracy under each
+   scenario stays within a small margin of its own baseline row and it
+   reaches the target in fewer server updates than FedAvg under the same
+   scenario: the ν̄ orientation is computed from the delivered k′-step
+   prefixes, so partial work calibrates instead of corrupting.
+
+Writes ``BENCH_scenarios.json`` at the repo root; CI uploads it as an
+artifact alongside the engine and population reports.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks.common import M_CLIENTS, emit, make_task
+from repro.configs.base import FedConfig
+from repro.fed import BufferedAsyncSimulation, make_clock
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+TARGET = 0.70
+K_MEAN = 40
+
+# scenario name -> FedConfig knobs (all resolved by make_scenario)
+SCENARIO_KNOBS = {
+    "baseline": {},
+    "dropout": {"dropout_rate": 0.3, "rejoin_delay": 2.0},
+    "spike": {"scenario_rate": 0.2, "scenario_magnitude": 8.0},
+    "flaky": {"scenario_rate": 0.3, "scenario_magnitude": 5.0},
+    "diurnal": {"scenario_period": 16.0,
+                "cohort_size": 8, "cohort_sampler": "availability"},
+}
+
+
+def _one(algorithm: str, staleness: str, scenario: str, t_updates: int,
+         lam: float = 0.5) -> dict:
+    m = M_CLIENTS
+    task = make_task("lr", noniid=True)
+    knobs = dict(SCENARIO_KNOBS[scenario])
+    buffer = min(m // 2, knobs.get("cohort_size", m))
+    fed = FedConfig(algorithm=algorithm, n_clients=m, lr=task.lr,
+                    calibration_rate=lam, weights="data",
+                    buffer_size=buffer, staleness=staleness,
+                    staleness_a=0.5, staleness_b=2,
+                    scenario=scenario, **knobs)
+    ks = np.full((t_updates * m + 1, m), K_MEAN, np.int32)
+    clock = make_clock(m, dist="lognormal", sigma=1.0, seed=7)
+    sim = BufferedAsyncSimulation(task.loss_fn, task.params, fed,
+                                  task.batcher, eval_fn=task.eval_fn,
+                                  k_schedule=ks, clock=clock)
+    hist = sim.run(t_updates)
+    r = hist.rounds_to_target(TARGET)
+    return {
+        "algorithm": algorithm,
+        "staleness": staleness,
+        "scenario": scenario,
+        "final_acc": float(hist.metric[-1]),
+        "updates_to_target": r,
+        "sim_s_to_target": (float(hist.sim_time[r - 1])
+                            if r is not None else None),
+        "sim_s_total": float(hist.sim_time[-1]),
+        "dropped_frac": (float(np.mean(hist.dropped))
+                         if hist.dropped else 0.0),
+        "mean_mass": float(np.mean(hist.mass)),
+    }
+
+
+def main(quick: bool = False) -> None:
+    algorithms = (("fedavg", "fedagrac") if quick
+                  else ("fedavg", "fednova", "fedagrac"))
+    staleness_modes = ("poly",) if quick else ("constant", "poly")
+    t_updates = 80 if quick else 120
+
+    rows, table = [], []
+    for algorithm in algorithms:
+        for staleness in staleness_modes:
+            for scenario in SCENARIO_KNOBS:
+                r = _one(algorithm, staleness, scenario, t_updates)
+                table.append(r)
+                rt = r["updates_to_target"]
+                rows.append((
+                    algorithm, staleness, scenario,
+                    f"{r['final_acc']:.4f}",
+                    rt if rt is not None else f">{t_updates}",
+                    (f"{r['sim_s_to_target']:.1f}"
+                     if r["sim_s_to_target"] is not None else "-"),
+                    f"{r['dropped_frac']:.3f}",
+                ))
+    emit(rows, ("algorithm", "staleness", "scenario", "final_acc",
+                f"updates_to_{int(TARGET * 100)}",
+                f"sim_s_to_{int(TARGET * 100)}", "dropped_frac"))
+
+    def acc(algorithm, scenario, staleness=staleness_modes[-1]):
+        return next(r["final_acc"] for r in table
+                    if r["algorithm"] == algorithm
+                    and r["scenario"] == scenario
+                    and r["staleness"] == staleness)
+
+    survival = {
+        # every (algorithm, scenario) cell reached the target
+        "all_reach_target": all(r["updates_to_target"] is not None
+                                for r in table),
+        # calibration under faults: fedagrac ≥ fedavg per fault scenario
+        "fedagrac_beats_fedavg": {
+            s: acc("fedagrac", s) >= acc("fedavg", s)
+            for s in SCENARIO_KNOBS if s != "baseline"},
+        # worst per-algorithm accuracy drop vs own baseline row
+        "max_acc_drop_vs_baseline": {
+            a: max(acc(a, "baseline", st) - acc(a, s, st)
+                   for s in SCENARIO_KNOBS for st in staleness_modes)
+            for a in algorithms},
+    }
+    report = {
+        "table": table,
+        "survival": survival,
+        "meta": {
+            "quick": quick,
+            "target": TARGET,
+            "t_updates": t_updates,
+            "k_local_steps": K_MEAN,
+            "clock": "lognormal(sigma=1.0, seed=7)",
+            "scenario_knobs": SCENARIO_KNOBS,
+            "claim": "partial-work recovery keeps every algorithm "
+                     "convergent under mid-round dropout, straggler "
+                     "spikes, flaky networks, and diurnal availability; "
+                     "FedaGrac's calibration survives every fault model",
+        },
+    }
+    out = ROOT / "BENCH_scenarios.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    ok = survival["all_reach_target"]
+    beats = sum(survival["fedagrac_beats_fedavg"].values())
+    print(f"# wrote {out} — all cells reach {TARGET:.2f}: "
+          f"{'OK' if ok else 'NO'}; fedagrac >= fedavg on "
+          f"{beats}/{len(survival['fedagrac_beats_fedavg'])} fault "
+          f"scenarios")
+
+
+if __name__ == "__main__":
+    main(quick=True)

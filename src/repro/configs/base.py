@@ -258,6 +258,45 @@ class FedConfig:
     # calibrated-update kernels, every aggregator/server op is a single
     # (M, P)-row einsum, and the pytree materializes only at the loss.
     param_layout: Literal["tree", "flat"] = "tree"
+    # -- failure scenarios (fed/scenarios.py, DESIGN.md §12) ------------------
+    # "baseline" leaves both engines on their unperturbed (golden-pinned)
+    # paths; other names inject faults as pure functions of
+    # (seed, round, client): "dropout" = mid-round aborts delivering k′ < K_i
+    # completed steps (partial-work recovery), "spike" = adversarial
+    # straggler bursts, "flaky" = network latency bursts, "diurnal" =
+    # correlated availability phases.  "trace" needs explicit tables — build
+    # via scenarios.trace_scenario and pass scenario= to the engine.
+    scenario: str = "baseline"
+    dropout_rate: float = 0.1              # dropout: per-(round, client) abort prob
+    scenario_rate: float = 0.1             # spike/flaky: per-event probability
+    scenario_magnitude: float = 10.0       # spike slowdown × / flaky mean burst (s)
+    scenario_period: float = 64.0          # diurnal availability period (rounds)
+    rejoin_delay: float = 0.0              # post-abort downtime (simulated s)
+
+    def __post_init__(self):
+        """Fail at construction, not as a registry KeyError inside jit:
+        every registry-backed field is validated against its live registry
+        (imported lazily — the registries live downstream of this module)."""
+        from repro.core.fedopt import ALGORITHMS
+        from repro.core.stages import SERVER_OPTIMIZERS
+        from repro.fed.population import SAMPLERS
+        from repro.fed.scenarios import SCENARIOS
+
+        def _check(field: str, value, valid) -> None:
+            if value not in valid:
+                raise ValueError(f"unknown {field} {value!r}; valid "
+                                 f"options: {sorted(valid)}")
+
+        _check("algorithm", self.algorithm, ALGORITHMS)
+        _check("cohort_sampler", self.cohort_sampler, SAMPLERS)
+        _check("param_layout", self.param_layout, ("tree", "flat"))
+        _check("server_opt", self.server_opt, SERVER_OPTIMIZERS)
+        _check("scenario", self.scenario, SCENARIOS)
+        _check("staleness", self.staleness, ("constant", "hinge", "poly"))
+        _check("speed_dist", self.speed_dist,
+               ("fixed", "uniform", "lognormal", "bimodal", "trace"))
+        _check("weights", self.weights, ("uniform", "data"))
+        _check("k_mode", self.k_mode, ("fixed", "random"))
 
 
 def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 128,

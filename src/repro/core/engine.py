@@ -75,6 +75,7 @@ def make_round_chunk(round_fn: Callable, r: Optional[int], *,
 def make_population_chunk(round_fn: Callable, r: Optional[int], *,
                           cohort_fn: Optional[Callable] = None,
                           sample_fn: Optional[Callable] = None,
+                          scenario_fn: Optional[Callable] = None,
                           donate: bool = True) -> Callable:
     """Fuse ``r`` cohort rounds (stages.make_cohort_round) into one jitted
     ``lax.scan`` — the partial-participation analogue of
@@ -93,12 +94,28 @@ def make_population_chunk(round_fn: Callable, r: Optional[int], *,
     * **host** (neither given) — cohorts precomputed on host:
       ``chunk_fn(state, batches, cohorts, k_steps, cweights, lam)`` with
       every input stacked per round (leading ``(r,)``, client axis C).
+
+    ``scenario_fn`` (device mode only) is the in-scan failure-scenario hook
+    (fed/scenarios.py, DESIGN.md §12): ``scenario_fn(t, k_c, ids) ->
+    k_eff`` maps the cohort's scheduled K rows to effective completed
+    steps k′ ≤ K — an O(C) evaluation, since scenario draws are keyed per
+    (round, client).  The round then runs the k′-step prefix and the
+    cohort weights are scaled by the delivered fraction
+    (``stages.delivered_weights``).  The host-precomputed paths apply the
+    identical perturbation eagerly (fed/simulation.py), so chunked and
+    per-round execution stay bit-identical.
     """
     if (cohort_fn is None) != (sample_fn is None):
         raise ValueError("cohort_fn and sample_fn come as a pair: in-scan "
                          "cohorts need an in-scan (device) batch sampler")
+    if scenario_fn is not None and cohort_fn is None:
+        raise ValueError("scenario_fn is an in-scan (device-mode) hook; "
+                         "host-precomputed chunks perturb their stacked "
+                         "inputs before the dispatch")
 
     if cohort_fn is not None:
+        from repro.core.stages import delivered_weights
+
         def chunk_fn(state: PyTree, ts: jax.Array, k_rows: jax.Array,
                      lam: jax.Array):
             assert r is None or ts.shape[0] == r, (
@@ -107,8 +124,12 @@ def make_population_chunk(round_fn: Callable, r: Optional[int], *,
             def body(st, xs):
                 t, krow, l = xs
                 ids, cw = cohort_fn(t)
-                return round_fn(st, sample_fn(t, ids), ids, krow[ids],
-                                cw, l)
+                k_c = krow[ids]
+                if scenario_fn is not None:
+                    k_eff = scenario_fn(t, k_c, ids)
+                    cw = delivered_weights(cw, k_eff, k_c)
+                    k_c = k_eff
+                return round_fn(st, sample_fn(t, ids), ids, k_c, cw, l)
 
             return jax.lax.scan(body, state, (ts, k_rows, lam))
     else:

@@ -198,6 +198,12 @@ def make_flat_client_update(spec: FlatSpec,
     (interpret-mode Pallas lowers to ~19 HLO ops of grid bookkeeping,
     pure overhead inside a scanned round).  The pytree exists only inside
     the per-step ``value_and_grad`` (``unravel`` in, ``ravel_rows`` out).
+
+    The per-row η mask doubles as the **effective-steps mask** of
+    partial-work recovery (fed/scenarios.py, DESIGN.md §12): a mid-round
+    dropout's k′ < K_i arrives as ``k_steps`` and rows past the abort get
+    η = 0 — the flat path needs no separate fault machinery, matching the
+    tree path's scan-length mask bit-for-bit at the same k′.
     """
     use_pallas = _use_pallas_default(use_pallas)
     needs_first = algo.selector in ("fedagrac", "first", "reverse")

@@ -67,6 +67,13 @@ def make_client_update(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     and client *i* applies updates only for ``k < K_i`` (DESIGN.md §3);
     ``K_i`` and ``lam`` are traced, so heterogeneity and λ-schedules change
     per round without recompiles.
+
+    The same mask is the **effective-steps mask** of partial-work recovery
+    (fed/scenarios.py, DESIGN.md §12): a mid-round dropout passes its
+    effective k′ < K_i as ``k_steps`` and this stage computes exactly the
+    k′-step prefix of the client's trajectory — no separate abort path.
+    ``K_i ≥ 1`` is a contract: downstream FedNova normalization and the
+    ν̄⁽ⁱ⁾ recovery (``recover_avg_grad``) divide by K_i.
     """
     needs_first = algo.selector in ("fedagrac", "first", "reverse")
     grad_fn = jax.value_and_grad(loss_fn)
@@ -182,6 +189,21 @@ BUFFERED_AGGREGATORS: dict[str, Callable] = {
     "mean": buffered_mean,
     "fednova": buffered_fednova,
 }
+
+
+def delivered_weights(weights: jax.Array, k_eff: jax.Array,
+                      k_sched: jax.Array) -> jax.Array:
+    """Partial-work recovery weight rule (fed/scenarios.py, DESIGN.md §12):
+    a mid-round dropout delivering k′ < K completed steps keeps its
+    (FedNova-normalized) per-step direction but carries only the fraction
+    of mass it earned, w̃ ← w̃ · k′/K — deliberately NOT renormalized, so
+    lost work is lost mass: the pseudo-delta step shrinks and the ν
+    mass-mix keeps (1 − Σw̃) of the previous calibration direction.  Shared
+    by the in-scan cohort hook (core/engine.py), its host mirror
+    (fed/simulation.py) and the async engine's report weighting."""
+    frac = (k_eff.astype(jnp.float32)
+            / jnp.maximum(k_sched.astype(jnp.float32), 1.0))
+    return weights * frac
 
 
 def nu_mass_mix(nu: PyTree, contrib: PyTree, mass: jax.Array) -> PyTree:

@@ -2,10 +2,17 @@ from repro.fed.async_engine import BufferedAsyncSimulation, staleness_weight
 from repro.fed.clock import (ClientClock, Timeline, make_clock,
                              simulate_timeline)
 from repro.fed.population import SAMPLERS, ClientPopulation
+from repro.fed.scenarios import (SCENARIOS, Scenario, diurnal_scenario,
+                                 dropout_scenario, flaky_scenario,
+                                 make_scenario, spike_scenario,
+                                 trace_scenario)
 from repro.fed.simulation import (FederatedSimulation, History,
                                   compare_algorithms)
 
 __all__ = ["FederatedSimulation", "History", "compare_algorithms",
            "BufferedAsyncSimulation", "staleness_weight", "ClientClock",
            "ClientPopulation", "SAMPLERS",
-           "Timeline", "make_clock", "simulate_timeline"]
+           "Timeline", "make_clock", "simulate_timeline",
+           "SCENARIOS", "Scenario", "make_scenario", "dropout_scenario",
+           "diurnal_scenario", "spike_scenario", "flaky_scenario",
+           "trace_scenario"]

@@ -57,6 +57,7 @@ from repro.data.partition import gaussian_k_schedule
 from repro.fed.clock import ClientClock, Timeline, make_clock, \
     simulate_timeline
 from repro.fed.population import ClientPopulation
+from repro.fed.scenarios import Scenario, make_scenario
 from repro.fed.simulation import History
 
 PyTree = Any
@@ -96,6 +97,7 @@ class BufferedAsyncSimulation:
                  lam_schedule: Optional[Callable[[int], float]] = None,
                  clock: Optional[ClientClock] = None,
                  population: Optional[ClientPopulation] = None,
+                 scenario: Optional[Scenario] = None,
                  t_max: int = 10_000):
         m = fed.n_clients
         self.fed = fed
@@ -147,6 +149,21 @@ class BufferedAsyncSimulation:
                 self.clock = ClientClock(
                     speeds=self.clock.speeds * self.population.step_rate,
                     latency=self.clock.latency)
+        # failure scenario (fed/scenarios.py, DESIGN.md §12): perturbs the
+        # timeline (k′ aborts, slowdowns, latency bursts, rejoin downtime)
+        # and scales report weights by the delivered fraction k′/K; None
+        # ("baseline") leaves the whole pipeline untouched
+        self.scenario = (scenario if scenario is not None
+                         else make_scenario(fed))
+        if self.scenario is not None:
+            if self.scenario.m != m:
+                raise ValueError(
+                    f"scenario for {self.scenario.m} clients does not "
+                    f"match fed.n_clients={m}")
+            if (self.scenario.availability_fn is not None
+                    and self.population is not None):
+                self.population.availability_fn = \
+                    self.scenario.availability_fn
         # private copy: the scanned chunk donates its carry (state + anchor
         # buffers), which would delete a caller-owned params tree
         params = jax.tree.map(jnp.array, params)
@@ -365,7 +382,8 @@ class BufferedAsyncSimulation:
         hist = History()
         fed = self.fed
         tl = simulate_timeline(self.k_schedule, self.clock, self.buffer,
-                               t_updates, population=self.population)
+                               t_updates, population=self.population,
+                               scenario=self.scenario)
         tau = tl.staleness
         s = staleness_weight(tau, fed.staleness, fed.staleness_a,
                              fed.staleness_b)
@@ -376,7 +394,14 @@ class BufferedAsyncSimulation:
                   if self.population is None
                   or self.population.full_participation
                   else self.population.report_weights())
-        sw_all = (base_w[tl.ids] * s).astype(np.float32)
+        sw = base_w[tl.ids] * s
+        if self.scenario is not None:
+            # partial-work recovery (DESIGN.md §12): an aborted report's
+            # FedNova-normalized per-step direction keeps only the mass it
+            # earned — w̃ · k′/K feeds BOTH the pseudo-delta aggregation
+            # and the ν mass-mix (stages.delivered_weights rule)
+            sw = sw * (tl.k_steps / np.maximum(tl.k_sched, 1))
+        sw_all = sw.astype(np.float32)
         cur_all = tl.versions == np.arange(t_updates)[:, None]
         # duplicate dispatches: only the LAST occurrence re-writes the
         # client's anchor row; earlier ones land in the scratch row M
@@ -439,6 +464,9 @@ class BufferedAsyncSimulation:
             hist.wall.extend([dt / r] * r)
             hist.sim_time.extend(tl.arrival_t[sl, -1].tolist())
             hist.staleness.extend(tau[sl].mean(axis=1).tolist())
+            if self.scenario is not None:
+                hist.dropped.extend(
+                    tl.aborted[sl].mean(axis=1).tolist())
             u += r
             if self.eval_fn is not None and u % eval_every == 0:
                 hist.metric.append(float(self.eval_fn(self.params)))

@@ -71,6 +71,12 @@ class Timeline:
       re-dispatched immediately); with partial participation
       (fed/population.py) the freed slot goes to a sampler-chosen client, so
       the concurrency cap C becomes a population property (DESIGN.md §10).
+    * ``k_sched``    (T, B) int — the SCHEDULED K_i of each report; equals
+      ``k_steps`` except under a failure scenario (fed/scenarios.py), where
+      ``k_steps`` carries the effective k′ ≤ K_i actually completed.
+    * ``aborted``    (T, B) bool — the report is a mid-round dropout
+      (k′ < K_i); its partial delta still enters the buffer
+      (partial-work recovery, DESIGN.md §12).
     """
     ids: np.ndarray
     versions: np.ndarray
@@ -80,6 +86,8 @@ class Timeline:
     arrival_t: np.ndarray
     fresh: np.ndarray
     dispatch_ids: np.ndarray
+    k_sched: np.ndarray = None
+    aborted: np.ndarray = None
 
     @property
     def t_updates(self) -> int:
@@ -92,7 +100,7 @@ class Timeline:
 
 def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
                       buffer: int, t_updates: int,
-                      population=None) -> Timeline:
+                      population=None, scenario=None) -> Timeline:
     """Run the FedBuff event loop for ``t_updates`` server updates.
 
     Event-accurate semantics (identical to the engine's original in-line
@@ -114,24 +122,67 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
     property of the dispatch process.  ``sampler="all"`` (C = M) leaves the
     reporter as the only idle client, reproducing the legacy stream
     bit-for-bit (the golden-pinned special case, DESIGN.md §10).
+
+    With a ``scenario`` (fed/scenarios.py, DESIGN.md §12) each dispatch is
+    perturbed by the scenario's pure per-(wave, client) draws: the task
+    runs only k′ ≤ K effective steps (mid-round dropout — the report is an
+    **abort event** whose partial work is still delivered), its duration is
+    ``k′ / (speed · factor) + latency + extra``, and an aborted client
+    **rejoins** only after ``scenario.rejoin_delay`` simulated seconds of
+    downtime (its next task starts late by the remaining downtime).  The
+    dispatched-client scatter thus follows the survivors: slots freed by
+    aborts re-fill immediately, but the aborted client itself is penalized.
+    ``scenario=None`` leaves every code path and float untouched.
     """
     m = clock.m
     k_schedule = np.asarray(k_schedule)
     heap: list[tuple[float, int, int]] = []
-    # client -> (version, K, wave, t_dispatch)
-    inflight: dict[int, tuple[int, int, int, float]] = {}
+    # client -> (version, K_eff, wave, t_dispatch, K_sched)
+    inflight: dict[int, tuple[int, int, int, float, int]] = {}
     wave_ctr = np.zeros(m, np.int64)
     busy = np.zeros(m, bool)
+    down_until = np.zeros(m, np.float64)   # abort rejoin gates (scenario)
     seq = 0
+
+    # per-wave scenario rows (k′ / speed factor / latency extra), evaluated
+    # once per wave by the scenario's host mirrors and LRU-cached — clients
+    # reach the same wave index at very different sim times under speed
+    # skew, so regeneration (one eager jit call) backs a bounded cache
+    scn_cache: dict[int, tuple] = {}
+
+    def scn_rows(d: int) -> tuple:
+        rows = scn_cache.pop(d, None)
+        if rows is None:
+            base = np.asarray(k_schedule[d % len(k_schedule)])
+            rows = (scenario.host_k_eff(d, base),
+                    scenario.host_speed_factor(d),
+                    scenario.host_latency_extra(d))
+        scn_cache[d] = rows
+        while len(scn_cache) > 128:
+            scn_cache.pop(next(iter(scn_cache)))
+        return rows
 
     def dispatch(i: int, t_now: float, version: int) -> None:
         nonlocal seq
         d = int(wave_ctr[i])
-        k = int(k_schedule[d % len(k_schedule), i])
-        inflight[i] = (version, k, d, t_now)
+        k_s = int(k_schedule[d % len(k_schedule), i])
+        if scenario is None:
+            k = k_s
+            dur = clock.duration(i, k)
+        else:
+            keff, f, lx = scn_rows(d)
+            k = int(keff[i])
+            dur = float(k / (clock.speeds[i] * f[i])
+                        + clock.latency[i] + lx[i])
+            wait = down_until[i] - t_now
+            if wait > 0:                   # still offline after an abort
+                dur += wait
+            if k < k_s and scenario.rejoin_delay > 0:
+                down_until[i] = t_now + dur + scenario.rejoin_delay
+        inflight[i] = (version, k, d, t_now, k_s)
         wave_ctr[i] += 1
         busy[i] = True
-        heapq.heappush(heap, (t_now + clock.duration(i, k), seq, i))
+        heapq.heappush(heap, (t_now + dur, seq, i))
         seq += 1
 
     if population is None:
@@ -152,6 +203,7 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
     versions = np.zeros(shape, np.int64)
     waves = np.zeros(shape, np.int64)
     k_steps = np.zeros(shape, np.int64)
+    k_sched = np.zeros(shape, np.int64)
     arrival_t = np.zeros(shape, np.float64)
     fresh = np.zeros(shape, bool)
 
@@ -162,24 +214,25 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
             task = inflight.pop(i)
             busy[i] = False
             nxt = (i if population is None
-                   else population.pick_dispatch(rng, busy, i))
+                   else population.pick_dispatch(rng, busy, i, phase=u))
             pending.append((t_arr, i, nxt, task))
             dispatch(nxt, t_arr, u)
         now = pending[-1][0]
-        for j, (t_arr, i, nxt, (v, k, d, _)) in enumerate(pending):
+        for j, (t_arr, i, nxt, (v, k, d, _, k_s)) in enumerate(pending):
             ids[u, j] = i
             dispatch_ids[u, j] = nxt
             versions[u, j] = v
             waves[u, j] = d
             k_steps[u, j] = k
+            k_sched[u, j] = k_s
             arrival_t[u, j] = t_arr
         # tie upgrade (see docstring); idempotent for duplicate dispatches —
         # the check always lands on the client's NEWEST in-flight task
         for t_arr, _, nxt, _ in pending:
             if t_arr == now and nxt in inflight:
-                ver, k, d, t_disp = inflight[nxt]
+                ver, k, d, t_disp, k_s = inflight[nxt]
                 if ver == u and t_disp == t_arr:
-                    inflight[nxt] = (u + 1, k, d, t_disp)
+                    inflight[nxt] = (u + 1, k, d, t_disp, k_s)
         # a dispatched task already consumed within this same buffer (and
         # whose client was not re-dispatched) has no in-flight entry: its
         # anchor row is rewritten before it is ever read again
@@ -190,11 +243,13 @@ def simulate_timeline(k_schedule: np.ndarray, clock: ClientClock,
     return Timeline(ids=ids, versions=versions, waves=waves,
                     k_steps=k_steps, staleness=staleness,
                     arrival_t=arrival_t, fresh=fresh,
-                    dispatch_ids=dispatch_ids)
+                    dispatch_ids=dispatch_ids,
+                    k_sched=k_sched, aborted=k_steps < k_sched)
 
 
 def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,
-               latency: float = 0.0, seed: int = 0) -> ClientClock:
+               latency: float = 0.0, seed: int = 0,
+               speeds=None) -> ClientClock:
     """Sample per-client speeds.
 
     fixed     : every client identical (async arrivals degenerate to
@@ -204,9 +259,27 @@ def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,
                 reported for production FL fleets.
     bimodal   : m−1 unit-speed devices + one 10× "GPU client" (the paper's
                 Raspberry-Pi + GPU hardware mix, §6.1).
+    trace     : an explicit per-client ``speeds`` array (steps per unit
+                time) measured from a real fleet — the empirical-trace
+                entry point; ``latency`` may also be a (m,) array there.
     """
+    if dist == "trace":
+        if speeds is None:
+            raise ValueError("dist='trace' needs an explicit speeds array "
+                             "(per-client steps per unit time)")
+        speeds = np.asarray(speeds, np.float64)
+        if speeds.shape != (m,):
+            raise ValueError(f"trace speeds must have shape ({m},), got "
+                             f"{speeds.shape}")
+        if not np.all(speeds > 0):
+            raise ValueError("trace speeds must be positive")
+    elif speeds is not None:
+        raise ValueError(f"explicit speeds are only valid with "
+                         f"dist='trace' (got dist={dist!r})")
     rng = np.random.default_rng(seed)
-    if dist == "fixed":
+    if dist == "trace":
+        pass
+    elif dist == "fixed":
         speeds = np.ones(m)
     elif dist == "uniform":
         speeds = rng.uniform(0.5, 1.5, m)
@@ -216,6 +289,10 @@ def make_clock(m: int, *, dist: str = "lognormal", sigma: float = 0.5,
         speeds = np.ones(m)
         speeds[-1] = 10.0
     else:
-        raise ValueError(f"unknown speed_dist {dist!r}")
-    return ClientClock(speeds=speeds,
-                       latency=np.full(m, float(latency)))
+        raise ValueError(f"unknown speed_dist {dist!r}; valid options: "
+                         f"['bimodal', 'fixed', 'lognormal', 'trace', "
+                         f"'uniform']")
+    lat = np.broadcast_to(np.asarray(latency, np.float64), (m,)).copy()
+    if not np.all(lat >= 0):
+        raise ValueError("latency must be ≥ 0")
+    return ClientClock(speeds=speeds, latency=lat)

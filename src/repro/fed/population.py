@@ -115,9 +115,14 @@ def _sample_availability(pop: "ClientPopulation", key: PRNGKey, t
     """Availability trace: client i is up this round w.p. availability_i;
     the cohort is a uniform draw among available clients (unavailable ones
     fill the cohort only when fewer than C are up — their Gumbel scores are
-    pushed below every available client's)."""
+    pushed below every available client's).  A scenario availability hook
+    (fed/scenarios.py, e.g. correlated diurnal phases) multiplies the
+    static profile by a traceable function of the round."""
     k_up, k_pick = jax.random.split(key)
-    up = jax.random.uniform(k_up, (pop.m,)) < pop.availability
+    p = pop.availability
+    if pop.availability_fn is not None:
+        p = p * pop.availability_fn(t)
+    up = jax.random.uniform(k_up, (pop.m,)) < p
     score = jax.random.gumbel(k_pick, (pop.m,)) + jnp.where(up, 0.0, -1e9)
     return jax.lax.top_k(score, pop.cohort_size)[1].astype(jnp.int32)
 
@@ -181,6 +186,12 @@ class ClientPopulation:
         self._host_cw = None          # lazily-jitted host-side cohort draw
         self._rr_next = 0             # round-robin dispatch pointer (async)
         self._cdf = None              # lazily-built dispatch-profile CDF
+        # time-varying availability multiplier (fed/scenarios.py): a
+        # traceable ``t -> (M,)`` hook attached by the engines when a
+        # scenario (e.g. diurnal) modulates availability; None = static
+        self.availability_fn = None
+        self._avail_jit = None        # its host mirror (eager jit)
+        self._cdf_cache: dict[int, np.ndarray] = {}
 
     @property
     def full_participation(self) -> bool:
@@ -268,7 +279,7 @@ class ClientPopulation:
         return rng.choice(self.m, self.cohort_size, replace=False, p=p)
 
     def pick_dispatch(self, rng: np.random.Generator, busy: np.ndarray,
-                      freed: int) -> int:
+                      freed: int, phase: int = 0) -> int:
         """Choose the next client to dispatch among idle (``~busy``)
         clients — the buffered-async analogue of the cohort draw (one slot
         frees per report, so concurrency stays capped at C).
@@ -278,7 +289,10 @@ class ClientPopulation:
         falling back to an explicit O(M) scan only on a pathological
         streak; ``all`` re-dispatches the reporter with NO rng draw (the
         legacy always-in-flight stream, bit-for-bit) and ``round_robin``
-        walks its cyclic pointer past busy clients."""
+        walks its cyclic pointer past busy clients.  ``phase`` (the server
+        update index) only matters with an ``availability_fn`` scenario
+        hook: the dispatch profile then follows the time-varying
+        availability (diurnal clients stop being dispatched at night)."""
         if self.sampler == "all":
             return int(freed)                  # the only idle client
         if self.sampler == "round_robin":
@@ -288,30 +302,48 @@ class ClientPopulation:
                 if not busy[i]:
                     return i
             raise RuntimeError("no idle client (caller must free one)")
-        cdf = self._profile_cdf()
+        cdf = self._profile_cdf(phase)
         for _ in range(64):
             i = min(int(np.searchsorted(cdf, rng.random(), side="right")),
                     self.m - 1)
             if not busy[i]:
                 return i
         ids = np.flatnonzero(~busy)
-        p = self._dispatch_profile()[ids]
+        p = self._dispatch_profile(phase)[ids]
         if p.sum() <= 0:                 # every idle client unavailable:
             p = np.ones(len(ids))        # fall back to a uniform pick
         return int(rng.choice(ids, p=p / p.sum()))
 
-    def _dispatch_profile(self) -> np.ndarray:
+    def _avail_profile(self, phase: int) -> np.ndarray:
+        p = self._avail_np.copy()
+        if self.availability_fn is not None:
+            if self._avail_jit is None:
+                self._avail_jit = jax.jit(self.availability_fn)
+            p = p * np.asarray(self._avail_jit(jnp.int32(phase)),
+                               np.float64)
+        return p
+
+    def _dispatch_profile(self, phase: int = 0) -> np.ndarray:
         if self.sampler == "weighted":
             p = np.asarray(self.weights, np.float64)
         elif self.sampler == "availability":
-            p = self._avail_np.copy()
+            p = self._avail_profile(phase)
         else:                                   # all / uniform / round_robin
             p = np.ones(self.m)
         s = p.sum()
         return p / s if s > 0 else np.full(self.m, 1.0 / self.m)
 
-    def _profile_cdf(self) -> np.ndarray:
-        if self._cdf is None:
-            self._cdf = np.cumsum(self._dispatch_profile())
-            self._cdf[-1] = 1.0
-        return self._cdf
+    def _profile_cdf(self, phase: int = 0) -> np.ndarray:
+        if self.availability_fn is None or self.sampler != "availability":
+            if self._cdf is None:
+                self._cdf = np.cumsum(self._dispatch_profile())
+                self._cdf[-1] = 1.0
+            return self._cdf
+        cdf = self._cdf_cache.pop(phase, None)
+        if cdf is None:
+            cdf = np.cumsum(self._dispatch_profile(phase))
+            cdf[-1] = 1.0
+        self._cdf_cache[phase] = cdf
+        while len(self._cdf_cache) > 32:
+            self._cdf_cache.pop(next(iter(self._cdf_cache)))
+        return cdf

@@ -1,0 +1,348 @@
+"""Failure-scenario layer: fault injection as a pure function of
+``(seed, round, client)`` (DESIGN.md §12).
+
+Both engines (fed/simulation.py, fed/async_engine.py) assumed a fantasy
+fleet: every dispatched client finishes its K_i local steps and device
+models are static synthetic draws (fed/clock.py).  Production cross-device
+FL is defined by churn — Fraboni et al.'s general async theory covers
+exactly the arbitrary-delay / heterogeneous-update regime, and the FedNova
+normalization already in ``core/stages.py`` is the recovery rule that makes
+accepting a dropout's *partial* work sound.  ``SCENARIOS`` names the fault
+models; a :class:`Scenario` perturbs three per-round quantities:
+
+* **effective steps** k′ ≤ K_i — mid-round dropout: the client aborts after
+  k′ completed steps but its partial delta is still delivered.  Recovery is
+  three existing mechanisms fed with k′ instead of K_i (partial-work
+  recovery): the client-update mask runs only k′ steps (per-row η on the
+  flat path, scan mask on the tree path), FedNova-style aggregation
+  normalizes by k′, and the aggregation / ν mass-mix weights are scaled by
+  the delivered fraction k′/K_i (``stages.delivered_weights``) so lost work
+  means lost mass, never a biased step.  k′ ≥ 1 always: a client that did
+  NOTHING is an availability event, not a dropout (k′ = 0 would divide the
+  FedNova normalizer and the ν̄⁽ⁱ⁾ recovery by zero).
+* **speed factor / latency extra** — straggler spikes and flaky-network
+  bursts: multiplicative slowdowns and additive upload delays consumed by
+  the async ``simulate_timeline`` (they shift arrivals → staleness); the
+  synchronous engine is insensitive to timing by construction.
+* **availability multiplier** — correlated diurnal phases: modulates the
+  ``availability`` cohort sampler and the async dispatch profile.
+
+Every draw is keyed ``fold_in(fold_in(fold_in(base, round), tag), client)``
+so any *subset* of clients evaluates to the same values as the full row —
+the in-scan cohort hook (core/engine.py) touches only O(C) clients while
+the host mirrors (eager jit, the ``host_cohort`` precedent) evaluate full
+rows, bit-identically.  ``scenario="baseline"`` maps to ``None``: the
+engines take their literally unchanged (golden-pinned) code paths.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# base-key salt: scenario draws must never collide with the cohort/batcher
+# streams, which fold the raw config seed
+_SALT = 0x5CE7A510
+
+
+def _client_uniform(key: jax.Array, ids: jax.Array, n: int = 1) -> jax.Array:
+    """(len(ids), n) U[0,1) draws keyed per client id — evaluating any
+    subset of ids yields the same per-id values as the full row."""
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i), (n,)))(
+            ids.astype(jnp.int32))
+
+
+class Scenario:
+    """A named device-fault model: pure per-round perturbation hooks.
+
+    Hooks (any may be None = identity):
+
+    * ``k_eff(key_t, t, ids, k_ids) -> int`` effective completed steps,
+      ``1 ≤ k′ ≤ K`` elementwise (partial-work recovery contract).
+    * ``speed(key_t, t, ids) -> f32`` multiplicative speed factors (> 0).
+    * ``latency(key_t, t, ids) -> f32`` additive report delays (≥ 0).
+    * ``avail(t) -> (M,)`` availability multipliers in [0, 1]
+      (deterministic full row — samplers need the whole profile).
+
+    ``key_t`` is ONE folded key per (scenario, round) shared by all hooks,
+    so correlated draws (e.g. a spike hitting both k′ and speed) see the
+    same events; hooks derive sub-streams with their own fold_in tags.
+    In the async engine the "round" index is the client's dispatch *wave*
+    (the same index that selects its ``k_schedule`` row).
+    """
+
+    def __init__(self, name: str, m: int, seed: int = 0, *,
+                 k_eff: Optional[Callable] = None,
+                 speed: Optional[Callable] = None,
+                 latency: Optional[Callable] = None,
+                 avail: Optional[Callable] = None,
+                 rejoin_delay: float = 0.0):
+        self.name = str(name)
+        self.m = int(m)
+        self.seed = int(seed)
+        self._k_eff = k_eff
+        self._speed = speed
+        self._latency = latency
+        self._avail = avail
+        self.rejoin_delay = float(rejoin_delay)
+        if self.rejoin_delay < 0:
+            raise ValueError(f"rejoin_delay must be ≥ 0, "
+                             f"got {self.rejoin_delay}")
+        self._base = jax.random.PRNGKey(self.seed ^ _SALT)
+        self._host: dict = {}
+
+    @property
+    def perturbs_k(self) -> bool:
+        return self._k_eff is not None
+
+    @property
+    def availability_fn(self) -> Optional[Callable]:
+        """Traceable ``t -> (M,)`` availability multiplier, or None."""
+        return self._avail
+
+    def _key(self, t) -> jax.Array:
+        return jax.random.fold_in(self._base, jnp.asarray(t, jnp.int32))
+
+    # -- traceable hooks (run on host AND inside jitted scans) ---------------
+
+    def _ids(self, ids) -> jax.Array:
+        return (jnp.arange(self.m, dtype=jnp.int32) if ids is None
+                else jnp.asarray(ids, jnp.int32))
+
+    def k_eff(self, t, k, ids=None) -> jax.Array:
+        """Effective steps k′ for round/wave ``t``.  ``ids=None``: ``k`` is
+        the full (M,) schedule row; else ``k`` holds the values at ``ids``
+        (the O(C) in-scan cohort form)."""
+        k = jnp.asarray(k, jnp.int32)
+        if self._k_eff is None:
+            return k
+        return self._k_eff(self._key(t), t, self._ids(ids), k)
+
+    def speed_factor(self, t, ids=None) -> jax.Array:
+        ids_ = self._ids(ids)
+        if self._speed is None:
+            return jnp.ones(ids_.shape, jnp.float32)
+        return self._speed(self._key(t), t, ids_)
+
+    def latency_extra(self, t, ids=None) -> jax.Array:
+        ids_ = self._ids(ids)
+        if self._latency is None:
+            return jnp.zeros(ids_.shape, jnp.float32)
+        return self._latency(self._key(t), t, ids_)
+
+    # -- host mirrors: the SAME jax functions evaluated eagerly, so host
+    # precomputation (timeline, chunk inputs) and in-scan evaluation are
+    # bit-identical for any (seed, round) — the host_cohort precedent ------
+
+    def _hjit(self, tag: str, fn: Callable) -> Callable:
+        if tag not in self._host:
+            self._host[tag] = jax.jit(fn)
+        return self._host[tag]
+
+    def host_k_eff(self, t: int, k_row: np.ndarray) -> np.ndarray:
+        fn = self._hjit("k", lambda tt, kk: self.k_eff(tt, kk))
+        return np.asarray(fn(jnp.int32(t), jnp.asarray(k_row, jnp.int32)))
+
+    def host_speed_factor(self, t: int) -> np.ndarray:
+        fn = self._hjit("s", lambda tt: self.speed_factor(tt))
+        return np.asarray(fn(jnp.int32(t)), np.float64)
+
+    def host_latency_extra(self, t: int) -> np.ndarray:
+        fn = self._hjit("l", lambda tt: self.latency_extra(tt))
+        return np.asarray(fn(jnp.int32(t)), np.float64)
+
+    def host_avail(self, t: int) -> np.ndarray:
+        if self._avail is None:
+            return np.ones(self.m)
+        fn = self._hjit("a", lambda tt: self._avail(tt))
+        return np.asarray(fn(jnp.int32(t)), np.float64)
+
+    def round_time(self, clock, t: int, k_row: np.ndarray) -> float:
+        """Synchronous-round duration under this scenario: the (possibly
+        slowed) straggler defines the round; aborted clients only run k′."""
+        k = self.host_k_eff(t, k_row).astype(np.float64)
+        f = self.host_speed_factor(t)
+        lx = self.host_latency_extra(t)
+        return float(np.max(k / (np.asarray(clock.speeds) * f)
+                            + np.asarray(clock.latency) + lx))
+
+
+# ---------------------------------------------------------------------------
+# named scenario builders
+# ---------------------------------------------------------------------------
+
+def dropout_scenario(m: int, *, rate: float = 0.1, seed: int = 0,
+                     rejoin_delay: float = 0.0) -> Scenario:
+    """Mid-round dropout: each (round, client) aborts w.p. ``rate`` after a
+    uniform k′ ∈ {1, …, K_i − 1} completed steps (K_i = 1 clients cannot
+    abort mid-round — there is no prefix to deliver).  ``rejoin_delay``
+    keeps an aborted client offline for that many simulated seconds before
+    its next async dispatch starts."""
+    rate = float(rate)
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"dropout rate must be in [0, 1], got {rate}")
+
+    def k_eff(key, t, ids, k_ids):
+        u = _client_uniform(jax.random.fold_in(key, 1), ids, 2)
+        drop = u[:, 0] < rate
+        part = 1 + jnp.floor(
+            u[:, 1] * (k_ids.astype(jnp.float32) - 1.0)).astype(k_ids.dtype)
+        return jnp.where(drop, jnp.minimum(part, k_ids), k_ids)
+
+    return Scenario("dropout", m, seed, k_eff=k_eff,
+                    rejoin_delay=rejoin_delay)
+
+
+def spike_scenario(m: int, *, rate: float = 0.1, magnitude: float = 10.0,
+                   frac: float = 0.25, seed: int = 0) -> Scenario:
+    """Adversarial straggler spikes: w.p. ``rate`` a round is *spiked* — a
+    random ``frac`` of clients runs ``magnitude``× slower.  Sync semantics
+    are deadline-based: a spiked client only completes ⌈K_i/magnitude⌉
+    steps inside the round window (partial work); async semantics slow its
+    report by ``magnitude``× (→ staleness).  One shared event draw keeps
+    the k′ and timing perturbations hitting the SAME clients."""
+    if magnitude < 1.0:
+        raise ValueError(f"spike magnitude must be ≥ 1, got {magnitude}")
+
+    def _hit(key, ids):
+        kr = jax.random.fold_in(key, 1)
+        spiked_round = jax.random.uniform(kr) < rate
+        u = _client_uniform(jax.random.fold_in(key, 2), ids)[:, 0]
+        return spiked_round & (u < frac)
+
+    def k_eff(key, t, ids, k_ids):
+        slow = jnp.ceil(k_ids.astype(jnp.float32)
+                        / magnitude).astype(k_ids.dtype)
+        return jnp.where(_hit(key, ids), jnp.maximum(slow, 1), k_ids)
+
+    def speed(key, t, ids):
+        return jnp.where(_hit(key, ids), 1.0 / jnp.float32(magnitude),
+                         1.0).astype(jnp.float32)
+
+    return Scenario("spike", m, seed, k_eff=k_eff, speed=speed)
+
+
+def flaky_scenario(m: int, *, rate: float = 0.1, magnitude: float = 5.0,
+                   seed: int = 0) -> Scenario:
+    """Flaky-network latency bursts: each (wave, client) report is delayed
+    by an extra U[0, 2·magnitude] seconds w.p. ``rate`` (mean burst =
+    ``magnitude``).  Pure timing noise — local work is unaffected, so the
+    synchronous engine is bit-identical to baseline and all damage arrives
+    as async staleness."""
+
+    def latency(key, t, ids):
+        u = _client_uniform(jax.random.fold_in(key, 1), ids, 2)
+        burst = u[:, 0] < rate
+        return jnp.where(burst, 2.0 * jnp.float32(magnitude) * u[:, 1],
+                         0.0).astype(jnp.float32)
+
+    return Scenario("flaky", m, seed, latency=latency)
+
+
+def diurnal_scenario(m: int, *, period: float = 64.0, floor: float = 0.05,
+                     seed: int = 0) -> Scenario:
+    """Correlated diurnal availability: two hemispheres in antiphase —
+    client i's up-probability is multiplied by
+    ``floor + (1−floor)·½(1 + cos 2π(t/period + φ_i))`` with φ = 0 for the
+    first half of the fleet and φ = ½ for the second.  Deterministic in
+    (round, client); consumed by the ``availability`` cohort sampler and
+    the async dispatch profile (phase = update index)."""
+    if period <= 0:
+        raise ValueError(f"diurnal period must be > 0, got {period}")
+    phase = (np.arange(m) >= m - m // 2).astype(np.float32) * 0.5
+
+    def avail(t):
+        tt = jnp.asarray(t, jnp.float32)
+        wave = 0.5 * (1.0 + jnp.cos(2.0 * jnp.pi
+                                    * (tt / period + jnp.asarray(phase))))
+        return jnp.float32(floor) + jnp.float32(1.0 - floor) * wave
+
+    return Scenario("diurnal", m, seed, avail=avail)
+
+
+def trace_scenario(speed_factors, *, latency_extras=None, avail=None,
+                   name: str = "trace", seed: int = 0) -> Scenario:
+    """Trace-driven device model: an explicit (T₀, M) table of per-round
+    speed *factors* (round t uses row ``t mod T₀``), optionally with
+    matching latency-extra and availability tables.  Combine with
+    ``make_clock(dist="trace", speeds=…)`` for absolute empirical speeds:
+    the clock carries the static profile, this scenario its time variation.
+    """
+    tbl = np.asarray(speed_factors, np.float32)
+    if tbl.ndim != 2:
+        raise ValueError(f"speed_factors must be (T, M), got shape "
+                         f"{tbl.shape}")
+    if not np.all(tbl > 0):
+        raise ValueError("trace speed factors must be positive")
+    t0, m = tbl.shape
+    jtbl = jnp.asarray(tbl)
+
+    def _table_hook(table):
+        jt = jnp.asarray(np.asarray(table, np.float32))
+        if jt.shape != (t0, m):
+            raise ValueError(f"trace tables must share shape ({t0}, {m}), "
+                             f"got {jt.shape}")
+        return jt
+
+    def speed(key, t, ids):
+        return jtbl[jnp.asarray(t, jnp.int32) % t0][ids]
+
+    latency = None
+    if latency_extras is not None:
+        jlat = _table_hook(latency_extras)
+        if not np.all(np.asarray(latency_extras) >= 0):
+            raise ValueError("trace latency extras must be ≥ 0")
+
+        def latency(key, t, ids):                        # noqa: F811
+            return jlat[jnp.asarray(t, jnp.int32) % t0][ids]
+
+    avail_fn = None
+    if avail is not None:
+        jav = _table_hook(avail)
+
+        def avail_fn(t):                                 # noqa: F811
+            return jav[jnp.asarray(t, jnp.int32) % t0]
+
+    return Scenario(name, m, seed, speed=speed, latency=latency,
+                    avail=avail_fn)
+
+
+def _trace_from_config(fed, m: int) -> Scenario:
+    raise ValueError(
+        "scenario='trace' needs explicit per-round device data that a "
+        "FedConfig cannot carry; build it with "
+        "repro.fed.scenarios.trace_scenario(speed_factors, ...) and pass "
+        "scenario=... to the engine (or use make_clock(dist='trace', "
+        "speeds=...) for a static empirical speed profile)")
+
+
+# registry — name -> builder(fed_config, m) -> Scenario | None
+SCENARIOS: dict[str, Callable] = {
+    "baseline": lambda fed, m: None,
+    "dropout": lambda fed, m: dropout_scenario(
+        m, rate=fed.dropout_rate, seed=fed.seed,
+        rejoin_delay=fed.rejoin_delay),
+    "diurnal": lambda fed, m: diurnal_scenario(
+        m, period=fed.scenario_period, seed=fed.seed),
+    "spike": lambda fed, m: spike_scenario(
+        m, rate=fed.scenario_rate, magnitude=fed.scenario_magnitude,
+        seed=fed.seed),
+    "flaky": lambda fed, m: flaky_scenario(
+        m, rate=fed.scenario_rate, magnitude=fed.scenario_magnitude,
+        seed=fed.seed),
+    "trace": _trace_from_config,
+}
+
+
+def make_scenario(fed, m: Optional[int] = None) -> Optional[Scenario]:
+    """Resolve ``fed.scenario`` to a :class:`Scenario` — None for
+    ``"baseline"`` so the engines keep their unperturbed (golden-pinned)
+    code paths."""
+    if fed.scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {fed.scenario!r}; valid "
+                         f"options: {sorted(SCENARIOS)}")
+    return SCENARIOS[fed.scenario](fed, int(m if m is not None
+                                            else fed.n_clients))

@@ -30,6 +30,7 @@ from repro.core import engine, flat, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
 from repro.fed.population import ClientPopulation
+from repro.fed.scenarios import Scenario, make_scenario
 
 PyTree = Any
 
@@ -47,6 +48,10 @@ class History:
     sim_time: list[float] = dataclasses.field(default_factory=list)
     staleness: list[float] = dataclasses.field(default_factory=list)
     mass: list[float] = dataclasses.field(default_factory=list)
+    # failure scenarios (fed/scenarios.py): per-round/update fraction of
+    # mid-round dropouts (k′ < K_i) — population-level for the sync engine,
+    # buffer-level for the async engine; empty without a scenario
+    dropped: list[float] = dataclasses.field(default_factory=list)
 
     def fairness(self) -> Optional[dict]:
         """FL fairness of the final round: worst-client metric and the
@@ -76,6 +81,7 @@ class FederatedSimulation:
                  k_schedule: Optional[np.ndarray] = None,
                  lam_schedule: Optional[Callable[[int], float]] = None,
                  population: Optional[ClientPopulation] = None,
+                 scenario: Optional[Scenario] = None,
                  t_max: int = 10_000):
         self.fed = fed
         self.algo = get_algorithm(fed.algorithm, fed)
@@ -130,6 +136,21 @@ class FederatedSimulation:
             raise ValueError(
                 f"population of {self.population.m} clients does not match "
                 f"fed.n_clients={fed.n_clients}")
+        # failure scenario (fed/scenarios.py, DESIGN.md §12): None for
+        # "baseline" — every run path below then takes its literally
+        # unperturbed (golden-pinned) branch
+        self.scenario = (scenario if scenario is not None
+                         else make_scenario(fed))
+        if self.scenario is not None:
+            if self.scenario.m != fed.n_clients:
+                raise ValueError(
+                    f"scenario for {self.scenario.m} clients does not "
+                    f"match fed.n_clients={fed.n_clients}")
+            if (self.scenario.availability_fn is not None
+                    and self.population is not None):
+                self.population.availability_fn = \
+                    self.scenario.availability_fn
+        self._dw = None       # lazily-jitted delivered-weights host mirror
 
     def _build_round(self) -> Callable:
         """The ONE synchronous-round builder every execution path shares —
@@ -187,10 +208,15 @@ class FederatedSimulation:
             fn = self._make_pop_round()
             pop, k_max = self.population, self.k_max
             if self._device_sampler:
+                scn = self.scenario
+                scenario_fn = (
+                    (lambda t, k_c, ids: scn.k_eff(t, k_c, ids=ids))
+                    if scn is not None and scn.perturbs_k else None)
                 self._chunks[r] = engine.make_population_chunk(
                     fn, r, cohort_fn=pop.cohort_and_weights,
                     sample_fn=lambda t, ids: self.batcher.sample_cohort(
-                        t, ids, k_max))
+                        t, ids, k_max),
+                    scenario_fn=scenario_fn)
             else:
                 self._chunks[r] = engine.make_population_chunk(fn, r)
         return self._chunks[r]
@@ -199,12 +225,44 @@ class FederatedSimulation:
         return (float(self.lam_schedule(t)) if self.lam_schedule
                 else self.algo.lam)
 
+    # -- failure-scenario host mirrors (fed/scenarios.py, DESIGN.md §12) ----
+
+    def _sched_row(self, t: int) -> np.ndarray:
+        return np.asarray(self.k_schedule[t % len(self.k_schedule)])
+
+    def _k_row(self, t: int) -> np.ndarray:
+        """Round t's effective K row: the schedule row, perturbed to k′ by
+        the scenario's host mirror — the SAME jax draw the in-scan hook
+        evaluates, so host and device paths stay bit-identical."""
+        row = self._sched_row(t)
+        if self.scenario is None or not self.scenario.perturbs_k:
+            return row
+        return self.scenario.host_k_eff(t, row)
+
+    def _delivered(self, cw: np.ndarray, k_eff: np.ndarray,
+                   k_sched: np.ndarray) -> np.ndarray:
+        """Host mirror of the in-scan delivered-fraction weight scaling."""
+        if self._dw is None:
+            self._dw = jax.jit(stages.delivered_weights)
+        return np.asarray(self._dw(jnp.asarray(cw),
+                                   jnp.asarray(k_eff, jnp.int32),
+                                   jnp.asarray(k_sched, jnp.int32)))
+
+    def _record_dropped(self, hist: History, t0: int, r: int) -> None:
+        """Population-level abort fraction per round (pure in (seed, t))."""
+        if self.scenario is None:
+            return
+        if not self.scenario.perturbs_k:
+            hist.dropped.extend([0.0] * r)
+            return
+        hist.dropped.extend(
+            float(np.mean(self._k_row(t0 + j) < self._sched_row(t0 + j)))
+            for j in range(r))
+
     def _chunk_inputs(self, t0: int, r: int):
         """Stacked (k_steps, weights, lam) + batches for rounds t0…t0+r-1."""
-        L = len(self.k_schedule)
         ks = jnp.asarray(np.stack(
-            [np.asarray(self.k_schedule[(t0 + j) % L]) for j in range(r)]
-        ).astype(np.int32))
+            [self._k_row(t0 + j) for j in range(r)]).astype(np.int32))
         lams = jnp.asarray([self._lam(t0 + j) for j in range(r)],
                            jnp.float32)
         weights = jnp.broadcast_to(self.weights, (r,) + self.weights.shape)
@@ -223,7 +281,8 @@ class FederatedSimulation:
         round, bit-identical to the pre-chunking loop (golden-pinned)."""
         lam = self._lam(t)
         round_fn = self._round_fn()
-        k_t = jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
+        k_t = (jnp.asarray(self.k_schedule[t % len(self.k_schedule)])
+               if self.scenario is None else jnp.asarray(self._k_row(t)))
         batches = self.batcher.round_batches(t, self.k_max)
         t0 = time.perf_counter()
         self.state, metrics = round_fn(self.state, batches, k_t,
@@ -234,6 +293,7 @@ class FederatedSimulation:
         hist.wall.append(time.perf_counter() - t0)
         hist.loss.append(float(metrics["loss"]))
         hist.kbar.append(float(metrics["kbar"]))
+        self._record_dropped(hist, t, 1)
 
     def _run_chunk(self, t0: int, r: int, hist: History) -> None:
         chunk_fn = self._chunk_fn(r)
@@ -246,6 +306,7 @@ class FederatedSimulation:
         hist.loss.extend(np.asarray(metrics["loss"], np.float64).tolist())
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
+        self._record_dropped(hist, t0, r)
 
     # -- partial-participation execution (fed/population.py, DESIGN.md §10) --
 
@@ -255,7 +316,14 @@ class FederatedSimulation:
         lam = self._lam(t)
         fn = self._pop_round_fn()
         ids, cw = self.population.host_cohort(t)
-        k_row = np.asarray(self.k_schedule[t % len(self.k_schedule)])
+        k_c = self._sched_row(t)[ids]
+        if self.scenario is not None and self.scenario.perturbs_k:
+            # same perturbation the in-scan hook applies (values identical
+            # by the per-(round, client) keying): run the k′ prefix and
+            # scale w̃ by the delivered fraction
+            k_eff = self._k_row(t)[ids]
+            cw = self._delivered(cw, k_eff, k_c)
+            k_c = k_eff
         if self._device_sampler:
             batches = self.batcher.sample_cohort(
                 jnp.int32(t), jnp.asarray(ids, jnp.int32), self.k_max)
@@ -264,25 +332,28 @@ class FederatedSimulation:
         t0 = time.perf_counter()
         self.state, metrics = fn(self.state, batches,
                                  jnp.asarray(ids, jnp.int32),
-                                 jnp.asarray(k_row[ids], jnp.int32),
+                                 jnp.asarray(k_c, jnp.int32),
                                  jnp.asarray(cw), jnp.float32(lam))
         jax.block_until_ready(self.state)
         hist.wall.append(time.perf_counter() - t0)
         hist.loss.append(float(metrics["loss"]))
         hist.kbar.append(float(metrics["kbar"]))
         hist.mass.append(float(metrics["mass"]))
+        self._record_dropped(hist, t, 1)
 
     def _run_pop_chunk(self, t0: int, r: int, hist: History) -> None:
         chunk_fn = self._pop_chunk_fn(r)
-        L = len(self.k_schedule)
+        perturb = self.scenario is not None and self.scenario.perturbs_k
         lams = jnp.asarray([self._lam(t0 + j) for j in range(r)],
                            jnp.float32)
         if self._device_sampler:
-            # cohort draw + batch sampling both happen inside the scan; the
-            # host ships only the (r,) round indices and (r, M) K rows
+            # cohort draw + batch sampling both happen inside the scan —
+            # with a scenario, so does the k′ perturbation
+            # (engine.make_population_chunk's scenario_fn); the host ships
+            # only the (r,) round indices and (r, M) SCHEDULED K rows
             ts = jnp.arange(t0, t0 + r, dtype=jnp.int32)
             k_rows = jnp.asarray(np.stack(
-                [np.asarray(self.k_schedule[(t0 + j) % L])
+                [self._sched_row(t0 + j)
                  for j in range(r)]).astype(np.int32))
             args = (ts, k_rows, lams)
         else:
@@ -290,8 +361,14 @@ class FederatedSimulation:
             cohorts = np.stack([ids for ids, _ in drawn])
             cws = np.stack([w for _, w in drawn])
             ks = np.stack(
-                [np.asarray(self.k_schedule[(t0 + j) % L])[cohorts[j]]
+                [self._sched_row(t0 + j)[cohorts[j]]
                  for j in range(r)]).astype(np.int32)
+            if perturb:
+                keffs = np.stack(
+                    [self._k_row(t0 + j)[cohorts[j]]
+                     for j in range(r)]).astype(np.int32)
+                cws = self._delivered(cws, keffs, ks)
+                ks = keffs
             batches = self.batcher.chunk_cohort_batches(t0, cohorts,
                                                         self.k_max)
             args = (batches, jnp.asarray(cohorts, jnp.int32),
@@ -304,6 +381,7 @@ class FederatedSimulation:
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
         hist.mass.extend(np.asarray(metrics["mass"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
+        self._record_dropped(hist, t0, r)
 
     def run(self, t_rounds: int, eval_every: int = 1,
             verbose: bool = False,

@@ -347,7 +347,13 @@ def test_flat_async_engine_matches_tree(name):
 
 def test_unknown_layout_raises():
     data, parts, params, _ = _lr_task()
-    fed = FedConfig(algorithm="fedavg", n_clients=M, param_layout="ring")
+    # validation happens at config construction (FedConfig.__post_init__)
+    with pytest.raises(ValueError, match="param_layout"):
+        FedConfig(algorithm="fedavg", n_clients=M, param_layout="ring")
+    # the engine guards are defense-in-depth for a layout smuggled past
+    # the frozen dataclass
+    fed = FedConfig(algorithm="fedavg", n_clients=M)
+    object.__setattr__(fed, "param_layout", "ring")
     with pytest.raises(ValueError, match="param_layout"):
         FederatedSimulation(lr_loss, params, fed,
                             FederatedBatcher(data, parts, 10))

@@ -1,0 +1,582 @@
+"""Failure-scenario layer (fed/scenarios.py, DESIGN.md §12): pure
+per-(seed, round, client) draws, partial-work recovery, abort/rejoin
+timelines, trace-driven clocks, config validation, and the zero-fault
+golden pins."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import stages
+from repro.core.fedopt import ALGORITHMS, get_algorithm
+from repro.data import DeviceBatcher, fedprox_synthetic
+from repro.fed import (BufferedAsyncSimulation, ClientPopulation,
+                       FederatedSimulation, SCENARIOS, Scenario,
+                       diurnal_scenario, dropout_scenario, flaky_scenario,
+                       make_clock, make_scenario, simulate_timeline,
+                       spike_scenario, trace_scenario)
+from repro.models.simple import lr_accuracy, lr_loss
+
+M = 8
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    batcher = DeviceBatcher(data, parts, batch_size=8, seed=0)
+    return batcher
+
+
+def _fed(**kw):
+    kw.setdefault("algorithm", "fedagrac")
+    kw.setdefault("k_mean", 5)
+    kw.setdefault("k_var", 2.0)
+    kw.setdefault("k_mode", "random")
+    return FedConfig(n_clients=M, lr=0.05, calibration_rate=0.5, **kw)
+
+
+def _params():
+    return {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+
+
+def _leaves_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _scenarios_under_test():
+    return [dropout_scenario(M, rate=0.5, seed=3),
+            spike_scenario(M, rate=0.5, magnitude=4.0, seed=3),
+            flaky_scenario(M, rate=0.4, magnitude=3.0, seed=3)]
+
+
+# ---------------------------------------------------------------------------
+# config validation (satellite: fail at construction, not in jit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field,bad,expect", [
+    ("algorithm", "fedsgd", "fedagrac"),
+    ("cohort_sampler", "random", "uniform"),
+    ("param_layout", "dense", "flat"),
+    ("server_opt", "lamb", "momentum"),
+    ("scenario", "meteor", "dropout"),
+    ("staleness", "exp", "poly"),
+    ("speed_dist", "zipf", "trace"),
+    ("weights", "mass", "uniform"),
+    ("k_mode", "poisson", "random"),
+])
+def test_config_validation_lists_valid_options(field, bad, expect):
+    """Unknown registry names raise ValueError at construction, naming the
+    field, the bad value, and the valid options."""
+    with pytest.raises(ValueError) as e:
+        FedConfig(**{field: bad})
+    msg = str(e.value)
+    assert field in msg and repr(bad) in msg and expect in msg
+
+
+def test_config_valid_everything_constructs():
+    FedConfig(algorithm="fednova", cohort_sampler="availability",
+              param_layout="flat", server_opt="adam", scenario="spike",
+              staleness="poly", speed_dist="bimodal", weights="data",
+              k_mode="random")
+
+
+def test_trace_scenario_config_points_to_explicit_builder():
+    with pytest.raises(ValueError, match="trace_scenario"):
+        make_scenario(FedConfig(scenario="trace"))
+
+
+# ---------------------------------------------------------------------------
+# scenario draws: pure in (seed, round, client)
+# ---------------------------------------------------------------------------
+
+def test_registry_names_and_baseline_is_none():
+    assert {"baseline", "dropout", "diurnal", "spike", "flaky",
+            "trace"} <= set(SCENARIOS)
+    assert make_scenario(FedConfig(n_clients=M)) is None
+    assert make_scenario(FedConfig(n_clients=M,
+                                   scenario="baseline")) is None
+    assert make_scenario(FedConfig(n_clients=M,
+                                   scenario="dropout")).perturbs_k
+
+
+def test_dropout_draws_bounded_and_deterministic():
+    scn = dropout_scenario(M, rate=0.6, seed=7)
+    row = np.full(M, 6)
+    dropped = 0
+    for t in range(50):
+        k1 = scn.host_k_eff(t, row)
+        k2 = scn.host_k_eff(t, row)
+        np.testing.assert_array_equal(k1, k2)       # pure in (seed, t, i)
+        assert np.all(k1 >= 1) and np.all(k1 <= row)
+        dropped += int((k1 < row).sum())
+    frac = dropped / (50 * M)
+    assert 0.4 < frac < 0.8                          # ≈ rate
+    # K_i = 1 clients cannot abort mid-round: no deliverable prefix
+    ones = np.ones(M, np.int64)
+    for t in range(10):
+        np.testing.assert_array_equal(scn.host_k_eff(t, ones), ones)
+
+
+def test_distinct_rounds_and_seeds_give_distinct_draws():
+    row = np.full(M, 9)
+    a = dropout_scenario(M, rate=0.5, seed=0)
+    b = dropout_scenario(M, rate=0.5, seed=1)
+    tdiff = [not np.array_equal(a.host_k_eff(t, row),
+                                a.host_k_eff(t + 1, row))
+             for t in range(8)]
+    sdiff = [not np.array_equal(a.host_k_eff(t, row),
+                                b.host_k_eff(t, row)) for t in range(8)]
+    assert any(tdiff) and any(sdiff)
+
+
+def test_subset_eval_matches_full_row():
+    """The O(C) cohort-form evaluation (ids given) must equal the full-row
+    draw indexed at ids — the per-client keying contract that keeps host
+    mirrors and in-scan hooks bit-identical."""
+    row = np.arange(2, M + 2)
+    ids = jnp.asarray([5, 1, 6], jnp.int32)
+    for scn in _scenarios_under_test():
+        for t in (0, 3, 11):
+            full_k = scn.host_k_eff(t, row)
+            sub_k = np.asarray(scn.k_eff(t, jnp.asarray(row[np.asarray(ids)],
+                                                        jnp.int32), ids=ids))
+            np.testing.assert_array_equal(full_k[np.asarray(ids)], sub_k)
+            np.testing.assert_array_equal(
+                scn.host_speed_factor(t)[np.asarray(ids)],
+                np.asarray(scn.speed_factor(t, ids=ids), np.float64))
+            np.testing.assert_array_equal(
+                scn.host_latency_extra(t)[np.asarray(ids)],
+                np.asarray(scn.latency_extra(t, ids=ids), np.float64))
+
+
+def test_draws_identical_under_jit():
+    """Eager and jitted evaluation agree bitwise (the host-mirror
+    contract)."""
+    scn = dropout_scenario(M, rate=0.5, seed=2)
+    row = jnp.full((M,), 7, jnp.int32)
+    eager = scn.k_eff(5, row)
+    jitted = jax.jit(lambda t, k: scn.k_eff(t, k))(jnp.int32(5), row)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+def test_spike_couples_keff_and_speed():
+    """A spiked (round, client) is slowed AND step-capped by the SAME event
+    draw; unspiked entries are untouched."""
+    scn = spike_scenario(M, rate=1.0, magnitude=4.0, frac=0.5, seed=0)
+    row = np.full(M, 8)
+    hit_any = False
+    for t in range(10):
+        k = scn.host_k_eff(t, row)
+        f = scn.host_speed_factor(t)
+        hit = f < 1.0
+        np.testing.assert_array_equal(k[hit], 2)     # ceil(8/4)
+        np.testing.assert_array_equal(k[~hit], 8)
+        np.testing.assert_allclose(f[hit], 0.25)
+        hit_any = hit_any or hit.any()
+    assert hit_any
+
+
+def test_diurnal_hemispheres_in_antiphase():
+    scn = diurnal_scenario(M, period=2.0, floor=0.0, seed=0)
+    a0 = scn.host_avail(0)
+    np.testing.assert_allclose(a0[: M // 2], 1.0, atol=1e-6)
+    np.testing.assert_allclose(a0[M // 2:], 0.0, atol=1e-6)
+    a1 = scn.host_avail(1)
+    np.testing.assert_allclose(a1[: M // 2], 0.0, atol=1e-6)
+    np.testing.assert_allclose(a1[M // 2:], 1.0, atol=1e-6)
+
+
+def test_trace_scenario_tables_cycle_and_validate():
+    tbl = np.linspace(0.5, 2.0, 3 * M).reshape(3, M)
+    scn = trace_scenario(tbl, avail=np.full((3, M), 0.5))
+    for t in range(7):
+        np.testing.assert_allclose(scn.host_speed_factor(t), tbl[t % 3],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(scn.host_avail(t), 0.5)
+    with pytest.raises(ValueError, match="positive"):
+        trace_scenario(np.zeros((2, M)))
+    with pytest.raises(ValueError, match="shape"):
+        trace_scenario(np.ones(M))
+    with pytest.raises(ValueError, match="share shape"):
+        trace_scenario(np.ones((2, M)), avail=np.ones((4, M)))
+
+
+def test_delivered_weights_rule():
+    w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+    out = stages.delivered_weights(w, jnp.asarray([2, 4, 1]),
+                                   jnp.asarray([4, 4, 1]))
+    np.testing.assert_allclose(np.asarray(out), [0.25, 0.25, 0.25])
+
+
+def test_scenario_m_mismatch_raises(task):
+    scn = dropout_scenario(M + 1, rate=0.2)
+    with pytest.raises(ValueError, match="does not match"):
+        FederatedSimulation(lr_loss, _params(), _fed(), task, scenario=scn)
+    with pytest.raises(ValueError, match="does not match"):
+        BufferedAsyncSimulation(lr_loss, _params(),
+                                _fed(buffer_size=4), task, scenario=scn)
+
+
+# ---------------------------------------------------------------------------
+# trace-driven clock (satellite)
+# ---------------------------------------------------------------------------
+
+def test_make_clock_trace_roundtrip():
+    speeds = np.asarray([1.0, 2.0, 0.5, 4.0])
+    lat = np.asarray([0.1, 0.0, 0.3, 0.2])
+    clock = make_clock(4, dist="trace", speeds=speeds, latency=lat)
+    np.testing.assert_array_equal(clock.speeds, speeds)
+    np.testing.assert_array_equal(clock.latency, lat)
+    assert clock.duration(2, 6) == pytest.approx(6 / 0.5 + 0.3)
+    # round-trips through simulate_timeline: identical to a hand-built
+    # ClientClock with the same arrays
+    ks = np.full((10, 4), 3)
+    tl = simulate_timeline(ks, clock, 2, 8)
+    from repro.fed import ClientClock
+    tl2 = simulate_timeline(ks, ClientClock(speeds=speeds, latency=lat),
+                            2, 8)
+    for f in ("ids", "versions", "waves", "k_steps", "arrival_t",
+              "k_sched", "aborted"):
+        np.testing.assert_array_equal(getattr(tl, f), getattr(tl2, f))
+
+
+def test_make_clock_trace_validates():
+    with pytest.raises(ValueError, match="needs an explicit speeds"):
+        make_clock(4, dist="trace")
+    with pytest.raises(ValueError, match="shape"):
+        make_clock(4, dist="trace", speeds=np.ones(3))
+    with pytest.raises(ValueError, match="positive"):
+        make_clock(2, dist="trace", speeds=np.asarray([1.0, 0.0]))
+    with pytest.raises(ValueError, match="only valid"):
+        make_clock(4, dist="lognormal", speeds=np.ones(4))
+    with pytest.raises(ValueError, match="valid options"):
+        make_clock(4, dist="warp")
+
+
+# ---------------------------------------------------------------------------
+# scenario timelines: determinism, aborts, rejoin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["fixed", "lognormal"])
+@pytest.mark.parametrize("idx", [0, 1, 2])
+def test_timeline_deterministic_and_prefix_stable(dist, idx):
+    """Property over scenarios × clocks: perturbed timelines are
+    bit-identical across repeated simulation, and a T-update timeline is
+    the prefix of the 2T one (the resumability contract)."""
+    scn = _scenarios_under_test()[idx]
+    clock = make_clock(M, dist=dist, seed=4)
+    ks = np.full((40, M), 6)
+    a = simulate_timeline(ks, clock, 3, 10, scenario=scn)
+    b = simulate_timeline(ks, clock, 3, 10, scenario=scn)
+    c = simulate_timeline(ks, clock, 3, 20, scenario=scn)
+    for f in ("ids", "versions", "waves", "k_steps", "staleness",
+              "arrival_t", "fresh", "dispatch_ids", "k_sched", "aborted"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        np.testing.assert_array_equal(getattr(a, f), getattr(c, f)[:10])
+
+
+def test_timeline_aborts_and_k_sched():
+    scn = dropout_scenario(M, rate=1.0, seed=0)
+    ks = np.full((20, M), 6)
+    tl = simulate_timeline(ks, make_clock(M, dist="fixed"), M, 5,
+                           scenario=scn)
+    np.testing.assert_array_equal(tl.k_sched, 6)
+    assert tl.aborted.all()                       # rate 1, K > 1
+    assert np.all(tl.k_steps >= 1) and np.all(tl.k_steps < 6)
+    # durations follow k′: a 2-step abort reports before a 5-step one
+    base = simulate_timeline(ks, make_clock(M, dist="fixed"), M, 5)
+    assert tl.arrival_t[-1, -1] < base.arrival_t[-1, -1]
+
+
+def test_rejoin_delay_penalizes_aborted_clients():
+    """A deterministic always-abort scenario (k′ independent of the round)
+    isolates the rejoin penalty: same k′ stream, strictly later arrivals."""
+    def _half(rejoin):
+        return Scenario("halfwork", M, rejoin_delay=rejoin,
+                        k_eff=lambda key, t, ids, k: jnp.maximum(k // 2, 1))
+    ks = np.full((20, M), 6)
+    clock = make_clock(M, dist="fixed")
+    t0 = simulate_timeline(ks, clock, M, 6, scenario=_half(0.0))
+    t5 = simulate_timeline(ks, clock, M, 6, scenario=_half(5.0))
+    # same events, same k′ draws — only the downtime shifts later arrivals
+    np.testing.assert_array_equal(t0.k_steps, t5.k_steps)
+    assert t0.aborted.all() and t5.aborted.all()
+    assert t5.arrival_t[-1, -1] >= t0.arrival_t[-1, -1] + 5.0
+    # update 0 happens before any rejoin penalty can apply
+    np.testing.assert_array_equal(t0.arrival_t[0], t5.arrival_t[0])
+
+
+def test_flaky_timeline_shifts_arrivals_only():
+    scn = flaky_scenario(M, rate=0.8, magnitude=4.0, seed=1)
+    ks = np.full((20, M), 5)
+    clock = make_clock(M, dist="lognormal", seed=2)
+    tl = simulate_timeline(ks, clock, 3, 8, scenario=scn)
+    base = simulate_timeline(ks, clock, 3, 8)
+    np.testing.assert_array_equal(tl.k_sched, 5)
+    assert not tl.aborted.any()
+    assert tl.arrival_t[-1, -1] > base.arrival_t[-1, -1]
+
+
+def test_diurnal_dispatch_profile_follows_phase():
+    """The async dispatch profile tracks the availability hook: at phase 0
+    hemisphere A is dispatchable, half a period later hemisphere B is."""
+    pop = ClientPopulation(M, cohort_size=3, sampler="availability",
+                           seed=0)
+    pop.availability_fn = diurnal_scenario(M, period=2.0,
+                                           floor=0.0).availability_fn
+    p0 = pop._dispatch_profile(0)
+    p1 = pop._dispatch_profile(1)
+    assert p0[: M // 2].sum() > 0.99 and p0[M // 2:].sum() < 0.01
+    assert p1[: M // 2].sum() < 0.01 and p1[M // 2:].sum() > 0.99
+
+
+def test_diurnal_cohorts_follow_phase(task):
+    """The availability sampler draws from the up hemisphere."""
+    fed = _fed(scenario="diurnal", scenario_period=2.0, cohort_size=3,
+               cohort_sampler="availability", availability=1.0)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    assert sim.population.availability_fn is not None
+    hemi_a, hemi_b = set(range(M // 2)), set(range(M // 2, M))
+    a_hits = b_hits = 0
+    for t in range(0, 20, 2):          # phase-0 rounds: hemisphere A up
+        ids = set(np.asarray(sim.population.host_cohort(t)[0]).tolist())
+        a_hits += len(ids & hemi_a)
+        b_hits += len(ids & hemi_b)
+    assert a_hits > 5 * max(b_hits, 1)
+
+
+# ---------------------------------------------------------------------------
+# zero-fault golden pin: baseline ≡ unperturbed engines
+# ---------------------------------------------------------------------------
+
+def _noop_scenario():
+    """Identity hooks: the scenario plumbing engages on every path but
+    perturbs nothing — multiplications by exactly 1.0 and additions of 0.0,
+    which must leave every float bit untouched."""
+    return Scenario("noop", M, seed=0,
+                    k_eff=lambda key, t, ids, k: k,
+                    speed=lambda key, t, ids: jnp.ones(ids.shape,
+                                                       jnp.float32),
+                    latency=lambda key, t, ids: jnp.zeros(ids.shape,
+                                                          jnp.float32))
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_noop_scenario_bit_identical_sync(task, algorithm):
+    """Zero-fault pin, all 9 algorithms on the sync engine: a no-op
+    scenario routes through every scenario branch yet reproduces the
+    baseline state bit-for-bit."""
+    ref = FederatedSimulation(lr_loss, _params(), _fed(algorithm=algorithm),
+                              task)
+    ref.run(3, eval_every=3)
+    scn = FederatedSimulation(lr_loss, _params(), _fed(algorithm=algorithm),
+                              task, scenario=_noop_scenario())
+    scn.run(3, eval_every=3)
+    _leaves_equal(ref.state, scn.state)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ["fedavg", "fednova", "fedagrac"])
+def test_noop_scenario_bit_identical_cohort(task, algorithm, layout):
+    fed = _fed(algorithm=algorithm, cohort_size=4, param_layout=layout)
+    ref = FederatedSimulation(lr_loss, _params(), fed, task)
+    ref.run(4, eval_every=2)
+    scn = FederatedSimulation(lr_loss, _params(), fed, task,
+                              scenario=_noop_scenario())
+    scn.run(4, eval_every=2)
+    _leaves_equal(ref.state, scn.state)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ["fedavg", "fednova", "fedagrac"])
+def test_noop_scenario_bit_identical_async(task, algorithm, layout):
+    fed = _fed(algorithm=algorithm, buffer_size=4, param_layout=layout,
+               staleness="poly")
+    ref = BufferedAsyncSimulation(lr_loss, _params(), fed, task)
+    ref.run(4)
+    scn = BufferedAsyncSimulation(lr_loss, _params(), fed, task,
+                                  scenario=_noop_scenario())
+    scn.run(4)
+    _leaves_equal(ref.state, scn.state)
+
+
+def test_baseline_config_resolves_to_none_path(task):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(scenario="baseline"), task)
+    asim = BufferedAsyncSimulation(lr_loss, _params(),
+                                   _fed(scenario="baseline",
+                                        buffer_size=4), task)
+    assert sim.scenario is None and asim.scenario is None
+
+
+# ---------------------------------------------------------------------------
+# partial-work recovery: pinned against an explicit k′-step reference
+# ---------------------------------------------------------------------------
+
+def _kprime_reference_schedule(sim, t_rounds):
+    """The realized k′ table, padded with one unused max-K row so the
+    reference simulation compiles the same k_max scan (bit-identity needs
+    identical scan lengths and batch draws)."""
+    kp = np.stack([sim._k_row(t) for t in range(t_rounds)])
+    pad = np.full((1, M), sim.k_max, kp.dtype)
+    return np.concatenate([kp, pad])
+
+
+@pytest.mark.parametrize("algorithm", ["fedavg", "fednova", "fedagrac"])
+def test_dropout_equals_explicit_kprime_schedule(task, algorithm):
+    """Sync full participation: the dropout scenario is bit-identical to
+    literally running the realized k′ schedule — partial work IS the
+    masked-K_i mechanism, fed with k′."""
+    fed = _fed(algorithm=algorithm, scenario="dropout", dropout_rate=0.5)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    hist = sim.run(5, eval_every=5)
+    ref = FederatedSimulation(
+        lr_loss, _params(), _fed(algorithm=algorithm), task,
+        k_schedule=_kprime_reference_schedule(sim, 5))
+    ref.run(5, eval_every=5)
+    _leaves_equal(sim.state, ref.state)
+    assert len(hist.dropped) == 5 and max(hist.dropped) > 0
+
+
+def test_dropout_equals_explicit_kprime_schedule_flat(task):
+    fed = _fed(scenario="dropout", dropout_rate=0.5, param_layout="flat")
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    sim.run(4, eval_every=4)
+    ref = FederatedSimulation(
+        lr_loss, _params(), _fed(param_layout="flat"), task,
+        k_schedule=_kprime_reference_schedule(sim, 4))
+    ref.run(4, eval_every=4)
+    _leaves_equal(sim.state, ref.state)
+
+
+def test_async_partial_work_reference(task):
+    """Buffered-async, buffer = M, fixed clock: one server update under a
+    deterministic half-work scenario equals the explicit stage-level
+    reference computed with k′ and delivered-fraction weights."""
+    # uniform k′ keeps durations equal, so the first buffer is exactly one
+    # report per client on wave 0 (heterogeneous k′ would let fast clients
+    # report twice before stragglers finish)
+    half = Scenario("half", M,
+                    k_eff=lambda key, t, ids, k: jnp.maximum(k // 2, 1))
+    fed = _fed(algorithm="fedavg", k_var=0.0, k_mode="fixed",
+               buffer_size=M, speed_dist="fixed")
+    sim = BufferedAsyncSimulation(lr_loss, _params(), fed, task,
+                                  scenario=half)
+    sim.run(1)
+
+    # reference: client_update at k′ + buffered mean with w̃·k′/K
+    k_sched = np.full(M, fed.k_mean)
+    k_eff = np.asarray(half.host_k_eff(0, k_sched))
+    algo = get_algorithm("fedavg", fed)
+    cu = stages.make_client_update(lr_loss, algo, lr=fed.lr,
+                                   k_max=sim.k_max, per_client_anchor=True)
+    params = _params()
+    anchors = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (M,) + p.shape), params)
+    batches = jax.vmap(
+        lambda i: task.sample_row(jnp.int32(0), i, sim.k_max))(
+            jnp.arange(M, dtype=jnp.int32))
+    c_b = stages.zero_corrections(params, M)
+    x_b, _, _, _ = cu(anchors, c_b, batches, jnp.asarray(k_eff, jnp.int32),
+                      jnp.float32(algo.lam))
+    w = np.full(M, 1.0 / M, np.float32)
+    sw = np.asarray(stages.delivered_weights(
+        jnp.asarray(w), jnp.asarray(k_eff), jnp.asarray(k_sched)))
+    kf = jnp.asarray(k_eff, jnp.float32)
+    kbar = jnp.dot(jnp.asarray(sw), kf) / np.sum(sw)
+    expect = stages.buffered_mean(params, anchors, x_b, kf,
+                                  jnp.asarray(sw), kbar)
+    got = sim.state["params"]
+    for le, lg in zip(jax.tree.leaves(expect), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(le), np.asarray(lg),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# perturbed runs: determinism across chunk splits, histories, engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario,knobs", [
+    ("dropout", {"dropout_rate": 0.5}),
+    ("spike", {"scenario_rate": 0.6, "scenario_magnitude": 3.0}),
+])
+def test_perturbed_run_bit_identical_across_chunk_splits(task, scenario,
+                                                         knobs):
+    fed = _fed(scenario=scenario, **knobs)
+    a = FederatedSimulation(lr_loss, _params(), fed, task)
+    a.run(6, eval_every=6)
+    b = FederatedSimulation(lr_loss, _params(), fed, task)
+    b.run(6, eval_every=2)
+    c = FederatedSimulation(lr_loss, _params(), fed, task)
+    c.run(6, eval_every=1)          # per-round compat path
+    _leaves_equal(a.state, b.state)
+    _leaves_equal(a.state, c.state)
+
+
+def test_cohort_dropout_bit_identical_device_vs_host_paths(task):
+    """Partial participation under dropout: the in-scan scenario hook
+    (device chunk) and the host-precomputed per-round path agree
+    bit-for-bit — the pure-draw contract end to end."""
+    fed = _fed(scenario="dropout", dropout_rate=0.5, cohort_size=4)
+    a = FederatedSimulation(lr_loss, _params(), fed, task)
+    a.run(6, eval_every=3)          # device: in-scan hook
+    b = FederatedSimulation(lr_loss, _params(), fed, task)
+    b.run(6, eval_every=1)          # host: eager mirrors
+    _leaves_equal(a.state, b.state)
+
+
+def test_async_dropout_deterministic_and_weighted(task):
+    fed = _fed(scenario="dropout", dropout_rate=0.6, buffer_size=4,
+               rejoin_delay=1.0)
+    a = BufferedAsyncSimulation(lr_loss, _params(), fed, task)
+    ha = a.run(6)
+    b = BufferedAsyncSimulation(lr_loss, _params(), fed, task)
+    hb = b.run(6)
+    _leaves_equal(a.state, b.state)
+    assert ha.dropped == hb.dropped and len(ha.dropped) == 6
+    assert max(ha.dropped) > 0
+    # delivered-fraction weighting: dropped reports carry less mass
+    base = BufferedAsyncSimulation(lr_loss, _params(),
+                                   _fed(buffer_size=4), task)
+    hbase = base.run(6)
+    assert np.mean(ha.mass) < np.mean(hbase.mass)
+
+
+def test_history_dropped_tracks_rate(task):
+    fed = _fed(scenario="dropout", dropout_rate=0.4)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    hist = sim.run(20, eval_every=20)
+    assert len(hist.dropped) == 20
+    assert all(0.0 <= d <= 1.0 for d in hist.dropped)
+    assert 0.15 < float(np.mean(hist.dropped)) < 0.65
+    # flaky perturbs only timing: sync dropped fraction is identically 0
+    fsim = FederatedSimulation(lr_loss, _params(),
+                               _fed(scenario="flaky"), task)
+    fh = fsim.run(3, eval_every=3)
+    assert fh.dropped == [0.0, 0.0, 0.0]
+
+
+def test_flaky_sync_bit_identical_to_baseline(task):
+    """Flaky networks delay reports, not work: the synchronous engine is
+    bit-identical to baseline under the flaky scenario."""
+    ref = FederatedSimulation(lr_loss, _params(), _fed(), task)
+    ref.run(3, eval_every=3)
+    scn = FederatedSimulation(lr_loss, _params(), _fed(scenario="flaky"),
+                              task)
+    scn.run(3, eval_every=3)
+    _leaves_equal(ref.state, scn.state)
+
+
+def test_scenario_round_time():
+    scn = spike_scenario(M, rate=1.0, magnitude=2.0, frac=0.5, seed=0)
+    clock = make_clock(M, dist="fixed", latency=0.5)
+    row = np.full(M, 8)
+    k = scn.host_k_eff(0, row).astype(np.float64)
+    f = scn.host_speed_factor(0)
+    expect = float(np.max(k / f + 0.5))
+    assert scn.round_time(clock, 0, row) == pytest.approx(expect)
