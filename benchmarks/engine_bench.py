@@ -251,6 +251,19 @@ def main(quick: bool = False) -> None:
     emit(rows, ("task", "engine", "mode", "chunk", "throughput_per_s",
                 "speedup"))
 
+    # headline metrics: the repo's perf trajectory at a glance.  The lm_*
+    # entries are back-filled by benchmarks/lm_bench.py when it runs after
+    # this module (benchmarks.run keeps that ordering).
+    lay_mlp = report["layout"]["mlp"]
+    report["headline"] = {
+        "sync_rounds_per_s": report["sync"]["lr"][
+            "chunked_device_rounds_per_s"],
+        "async_updates_per_s": report["async"]["lr"][
+            "chunked_device_updates_per_s"],
+        "layout_speedup_end_to_end": lay_mlp["speedup_flat"],
+        "layout_speedup_engine": lay_mlp["engine_speedup_flat"],
+    }
+
     report["meta"] = {
         "quick": quick,
         "backend": jax.default_backend(),

@@ -1,0 +1,191 @@
+"""§LM rounds: real language-model federated training on the flat buffer.
+
+Claim validated (DESIGN.md §13): the flat-native loss boundary — the model
+reading view-table slices of the single lane-padded buffer, gradients
+accumulated straight back into one ``(P,)`` cotangent — runs real
+transformer rounds (scaled-down gemma-2b: MQA, GeGLU, tied embeddings,
+remat) end-to-end on the sync engine with NO per-round pytree
+materialisation, at tree-round parity or better, and supports the
+mixed-precision production configuration (bf16 params/compute under an
+f32 master) that the tree layout cannot express.
+
+Measured INTERLEAVED (tree, flat, bf16, tree, …, best-of-N each) for the
+same reason as engine_bench: this container's shared cores swing single
+measurements by ±50%.  The deterministic companion numbers are the HLO
+layout comparison with the DESIGN.md §13 conversion-bytes line item (the
+grad-boundary traffic the flat path adds over the plain tree
+``value_and_grad``).
+
+Writes ``BENCH_lm.json`` at the repo root (CI uploads it) and back-fills
+``headline.lm_tokens_per_s`` into ``BENCH_engine.json`` when present.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import FedConfig, reduced
+from repro.configs.registry import get_arch
+from repro.data import DeviceLMBatcher, lm_sequences
+from repro.fed import FederatedSimulation
+from repro.models import model as M
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+M_CLIENTS = 4
+
+
+def _build(quick: bool):
+    base = get_arch("gemma-2b")
+    if quick:
+        cfg = reduced(base, n_layers=2, d_model=64, vocab=256)
+        seq, batch = 16, 2
+    else:
+        cfg = reduced(base, n_layers=4, d_model=128, vocab=512)
+        seq, batch = 32, 2
+    return cfg, seq, batch
+
+
+def _make_sim(cfg, seq, batch, layout, k_mean, bf16=False, seed=0):
+    import dataclasses
+    if bf16:
+        cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    key = jax.random.PRNGKey(seed)
+    streams = [lm_sequences(jax.random.fold_in(key, i), 32, seq, cfg.vocab,
+                            skew_topic=i) for i in range(M_CLIENTS)]
+    batcher = DeviceLMBatcher(streams, batch_size=batch, seed=seed)
+    fed = FedConfig(algorithm="fedagrac", n_clients=M_CLIENTS,
+                    k_mean=k_mean, lr=0.1, calibration_rate=0.5,
+                    param_layout=layout,
+                    master_dtype="float32" if bf16 else "")
+    params = M.init_params(key, cfg)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    return FederatedSimulation(lambda p, b: loss_fn(p, b), params, fed,
+                               batcher), loss_fn, params, batcher
+
+
+def _round_rates(cfg, seq, batch, k_mean, chunk, t_rounds,
+                 reps) -> dict[str, float]:
+    """(variant → rounds/s), variants interleaved against ambient load."""
+    sims = {}
+    for variant in ("tree", "flat", "flat_bf16"):
+        sim, *_ = _make_sim(cfg, seq, batch,
+                            "tree" if variant == "tree" else "flat",
+                            k_mean, bf16=variant == "flat_bf16")
+        sim.run(min(chunk, t_rounds), chunk_rounds=chunk)   # compile
+        sims[variant] = sim
+    best = {v: 0.0 for v in sims}
+    for _ in range(reps):
+        for variant, sim in sims.items():
+            t0 = time.perf_counter()
+            sim.run(t_rounds, chunk_rounds=chunk)
+            best[variant] = max(best[variant],
+                                t_rounds / (time.perf_counter() - t0))
+    return best
+
+
+def _hlo_comparison(cfg, seq, batch, k_mean) -> dict:
+    """Deterministic companion: compile the full LM round in both layouts
+    and the bare grad boundary in both layouts — bytes ratio plus the
+    conversion line item."""
+    from benchmarks.roofline_table import conversion_bytes
+    from repro.core import flat as flat_lib, rounds
+    from repro.core.fedopt import get_algorithm
+    from repro.roofline import analysis
+
+    _, loss_fn, params, batcher = _make_sim(cfg, seq, batch, "tree", k_mean)
+    fed = FedConfig(algorithm="fedagrac", n_clients=M_CLIENTS,
+                    k_mean=k_mean, lr=0.1, calibration_rate=0.5)
+    algo = get_algorithm("fedagrac", fed)
+    spec = flat_lib.make_flat_spec(params)
+    batches = batcher.round_batches(jnp.int32(0), k_mean)
+    ks = jnp.full((M_CLIENTS,), k_mean, jnp.int32)
+    ws = jnp.full((M_CLIENTS,), 1.0 / M_CLIENTS, jnp.float32)
+    lam = jnp.float32(0.5)
+    rl = {}
+    for layout in ("tree", "flat"):
+        if layout == "flat":
+            fn = flat_lib.make_flat_round(spec, loss_fn, algo, lr=0.1,
+                                          k_max=k_mean)
+            st = flat_lib.flatten_state(
+                spec, rounds.init_state(params, M_CLIENTS, algo))
+        else:
+            fn = rounds.make_round(loss_fn, algo, lr=0.1, k_max=k_mean)
+            st = rounds.init_state(params, M_CLIENTS, algo)
+        compiled = jax.jit(fn).lower(st, batches, ks, ws, lam).compile()
+        rl[layout] = analysis.from_compiled(compiled, chips=1)
+    conv = conversion_bytes(spec, loss_fn, params, batches)
+    return analysis.layout_comparison(rl["tree"], rl["flat"],
+                                      conversion_bytes=conv)
+
+
+def main(quick: bool = False) -> None:
+    cfg, seq, batch = _build(quick)
+    k_mean = 2 if quick else 4
+    chunk = 4
+    t_rounds = 8 if quick else 16
+    reps = 3 if quick else 5
+
+    rates = _round_rates(cfg, seq, batch, k_mean, chunk, t_rounds, reps)
+    tokens_per_round = M_CLIENTS * k_mean * batch * seq
+    cmp = _hlo_comparison(cfg, seq, batch, k_mean)
+
+    rows = []
+    for variant, rps in rates.items():
+        rows.append(("lm", "sync", variant, chunk, f"{rps:.2f}",
+                     f"{rps * tokens_per_round:.0f}",
+                     f"{rps / rates['tree']:.2f}"))
+    rows.append(("lm", "hlo", "conversion_bytes", "-",
+                 f"{cmp['conversion_bytes']:.3e}",
+                 f"{cmp['conversion_fraction_of_flat']:+.4f}", "-"))
+    emit(rows, ("task", "engine", "variant", "chunk", "rounds_per_s",
+                "tokens_per_s", "speedup_vs_tree"))
+
+    report = {
+        "model": {
+            "family": "gemma-2b (reduced)",
+            "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "vocab": cfg.vocab, "seq": seq, "batch": batch,
+            "params": cfg.param_count(),
+        },
+        "sync": {v: {
+            "rounds_per_s": r,
+            "tokens_per_s": r * tokens_per_round,
+            "speedup_vs_tree": r / rates["tree"],
+        } for v, r in rates.items()},
+        "layout_hlo": cmp,
+        "meta": {
+            "quick": quick, "backend": jax.default_backend(),
+            "jax": jax.__version__, "m_clients": M_CLIENTS,
+            "k_local_steps": k_mean, "t_rounds": t_rounds, "chunk": chunk,
+            "algorithm": "fedagrac",
+            "unit": "rounds/s, tokens/s = rounds/s × M × K̄ × B × S",
+        },
+    }
+    out = ROOT / "BENCH_lm.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    sp = rates["flat"] / rates["tree"]
+    print(f"# wrote {out} — flat/tree LM round ratio {sp:.2f}x, "
+          f"flat {rates['flat'] * tokens_per_round:.0f} tok/s, "
+          f"bf16+f32-master {rates['flat_bf16'] * tokens_per_round:.0f} "
+          f"tok/s; conversion {cmp['conversion_fraction_of_flat']:+.2%} "
+          f"of flat round bytes")
+
+    # back-fill the headline into BENCH_engine.json when it exists
+    eng = ROOT / "BENCH_engine.json"
+    if eng.exists():
+        data = json.loads(eng.read_text())
+        data.setdefault("headline", {})["lm_tokens_per_s"] = (
+            rates["flat"] * tokens_per_round)
+        data["headline"]["lm_layout_speedup"] = sp
+        eng.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+
+if __name__ == "__main__":
+    main(quick=True)

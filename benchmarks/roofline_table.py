@@ -54,6 +54,31 @@ def run(quick: bool = False) -> list[tuple]:
     return rows
 
 
+def conversion_bytes(spec, loss_fn, params, batches) -> float:
+    """HLO bytes of the flat-native grad boundary MINUS the plain tree
+    ``vmap(value_and_grad)`` at the same round shape (DESIGN.md §13): the
+    view-table slices into the single buffer plus the flat cotangent
+    accumulation out of it — the conversion traffic line item."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import flat as flat_lib
+    from repro.roofline import analysis
+
+    m = jax.tree.leaves(batches)[0].shape[0]
+    step = jax.tree.map(lambda a: a[:, 0], batches)      # one local step
+    rows_ = jnp.stack([flat_lib.ravel(spec, params)] * m)
+    trees = jax.tree.map(lambda a: jnp.stack([a] * m), params)
+
+    flat_fn = jax.vmap(flat_lib.flat_value_and_grad(spec, loss_fn))
+    tree_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    c_flat = jax.jit(flat_fn).lower(rows_, step).compile()
+    c_tree = jax.jit(tree_fn).lower(trees, step).compile()
+    b_flat = analysis.from_compiled(c_flat, chips=1).bytes_accessed
+    b_tree = analysis.from_compiled(c_tree, chips=1).bytes_accessed
+    return b_flat - b_tree
+
+
 def layout_rows(quick: bool = False) -> list[tuple]:
     """Compile the lr/mlp round in both layouts, compare HLO bytes/ops."""
     import jax
@@ -93,7 +118,9 @@ def layout_rows(quick: bool = False) -> list[tuple]:
             rl[layout] = analysis.from_compiled(compiled, chips=1,
                                                 hlo_text=hlo)
             ops[layout] = analysis.hlo_op_count(hlo)
-        cmp = analysis.layout_comparison(rl["tree"], rl["flat"])
+        conv = conversion_bytes(spec, task.loss_fn, task.params, batches)
+        cmp = analysis.layout_comparison(rl["tree"], rl["flat"],
+                                         conversion_bytes=conv)
         for layout in ("tree", "flat"):
             rows.append((
                 "roofline", "layout", "cpu", kind, layout,
@@ -104,6 +131,12 @@ def layout_rows(quick: bool = False) -> list[tuple]:
                 else f"{cmp['bytes_ratio']:.3f}",
                 "1.000" if layout == "tree"
                 else f"{ops['flat'] / ops['tree']:.3f}"))
+        # the loss-boundary conversion line item (DESIGN.md §13): extra
+        # grad-path bytes of the flat-native boundary over the tree one
+        rows.append((
+            "roofline", "layout", "cpu", kind, "conversion",
+            f"{cmp['conversion_bytes']:.3e}", "-", "-",
+            f"{cmp['conversion_fraction_of_flat']:+.4f}", "-"))
     return rows
 
 

@@ -13,10 +13,11 @@ import traceback
 
 from benchmarks import (ablation_int8_nu, engine_bench, fairness,
                         fig2_lambda, fig3_orientation, fig4_grid,
-                        fig5_curves, kernel_bench, population_bench,
-                        roofline_table, scenario_bench, server_opt,
-                        table1_deterioration, table2_utilization,
-                        table6_rounds, table_async, thm1_quadratic)
+                        fig5_curves, kernel_bench, lm_bench,
+                        population_bench, roofline_table, scenario_bench,
+                        server_opt, table1_deterioration,
+                        table2_utilization, table6_rounds, table_async,
+                        thm1_quadratic)
 
 MODULES = {
     "thm1": thm1_quadratic,
@@ -34,6 +35,7 @@ MODULES = {
     "server_opt": server_opt,
     "roofline": roofline_table,
     "engine": engine_bench,
+    "lm": lm_bench,
     "population": population_bench,
     "scenarios": scenario_bench,
 }

@@ -1,12 +1,22 @@
-"""End-to-end driver: federated training of a ~100M-param LM with FedaGrac.
+"""End-to-end driver: federated LM training on the FLAT single-buffer
+engine (DESIGN.md §11/§13).
 
-    PYTHONPATH=src python examples/fed_lm_train.py [--rounds 50] [--small]
+    PYTHONPATH=src python examples/fed_lm_train.py [--rounds 30] [--small]
 
 4 clients hold topic-skewed Zipf token streams (non-IID at the unigram
-level) and run K_i ~ N(4, 2²) local steps per round.  Default model: an
-8-layer d=512 llama-family transformer (~100M params with the 32k vocab);
---small shrinks it to a 2-layer d=128 model for CI (≈30 s for 12 rounds).
-Checkpoints every 10 rounds via repro.checkpoint.
+level) and run K_i ~ N(4, 2²) local steps per round of a scaled-down
+gemma-2b (MQA, GeGLU, tied embeddings, `jax.checkpoint` remat) through
+``FederatedSimulation`` with ``param_layout="flat"``: the whole round —
+k-step client scans included — runs on one lane-padded ``(P,)``/``(M, P)``
+buffer, the model reading view-table slices of it at the loss boundary
+(``core.flat.flat_value_and_grad``; flash-attention forward dispatches to
+the Pallas kernel on TPU).  ``--bf16`` switches to the mixed-precision
+production configuration: bf16 params/compute under an f32 master buffer
+(``FedConfig.master_dtype``).  Batches are drawn on device inside the
+scanned round chunks (``DeviceLMBatcher``); ``--sampler host`` keeps the
+numpy host batcher.  Checkpoints at every eval boundary.
+
+--small shrinks to a 2-layer d=64 model for CI (~40 s for 8 rounds).
 """
 import argparse
 import dataclasses
@@ -19,7 +29,7 @@ import jax.numpy as jnp
 from repro import checkpoint
 from repro.configs.base import FedConfig, reduced
 from repro.configs.registry import get_arch
-from repro.data import LMFederatedBatcher, lm_sequences
+from repro.data import DeviceLMBatcher, LMFederatedBatcher, lm_sequences
 from repro.fed import FederatedSimulation
 from repro.models import model as M
 
@@ -27,40 +37,57 @@ MCLIENTS = 4
 
 
 def build_config(small: bool):
-    base = get_arch("llama3-8b")
+    base = get_arch("gemma-2b")
     if small:
-        cfg = reduced(base, n_layers=2, d_model=128)
-        return dataclasses.replace(cfg, vocab=512)
-    cfg = reduced(base, n_layers=8, d_model=512, vocab=32_000)
-    return dataclasses.replace(cfg, n_heads=8, n_kv_heads=4, head_dim=64,
-                               d_ff=2048, vocab=32_000)
+        return reduced(base, n_layers=2, d_model=64, vocab=256)
+    return reduced(base, n_layers=6, d_model=512, vocab=8192)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--small", action="store_true",
                     help="2-layer reduced model (CI budget)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--algo", default="fedagrac")
+    ap.add_argument("--layout", choices=("flat", "tree"), default="flat")
+    ap.add_argument("--bf16", action="store_true",
+                    help="bf16 params/compute + f32 flat master buffer")
+    ap.add_argument("--sampler", choices=("device", "host"),
+                    default="device")
+    ap.add_argument("--eval-every", type=int, default=5,
+                    help="eval/checkpoint cadence = round-chunk length")
     ap.add_argument("--ckpt", default="/tmp/fed_lm_{round}.msgpack")
     args = ap.parse_args()
 
     cfg = build_config(args.small)
-    print(f"model: llama-family {cfg.n_layers}L d={cfg.d_model} "
-          f"vocab={cfg.vocab}  params ≈ {cfg.param_count() / 1e6:.1f}M")
+    if args.bf16:
+        if args.layout != "flat":
+            raise SystemExit("--bf16 requires --layout flat (the f32 "
+                             "master IS the flat buffer)")
+        cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    seq = min(args.seq, 32) if args.small else args.seq
+    print(f"model: gemma-family {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab} dtype={cfg.dtype}  "
+          f"params ≈ {cfg.param_count() / 1e6:.1f}M  layout={args.layout}"
+          + (" (f32 master)" if args.bf16 else ""))
 
     key = jax.random.PRNGKey(0)
-    streams = [lm_sequences(jax.random.fold_in(key, i), 128, args.seq,
-                            cfg.vocab, skew_topic=i) for i in range(MCLIENTS)]
-    batcher = LMFederatedBatcher(streams, batch_size=args.batch)
+    streams = [lm_sequences(jax.random.fold_in(key, i), 128, seq,
+                            cfg.vocab, skew_topic=i)
+               for i in range(MCLIENTS)]
+    make_batcher = (DeviceLMBatcher if args.sampler == "device"
+                    else LMFederatedBatcher)
+    batcher = make_batcher(streams, batch_size=args.batch)
     fed = FedConfig(algorithm=args.algo, n_clients=MCLIENTS, k_mean=4,
-                    k_var=4.0, lr=0.3, calibration_rate=0.5)
+                    k_var=4.0, lr=0.3, calibration_rate=0.5,
+                    param_layout=args.layout,
+                    master_dtype="float32" if args.bf16 else "")
 
     params = M.init_params(key, cfg)
     loss_fn = functools.partial(M.lm_loss, cfg=cfg)
-    held_out = lm_sequences(jax.random.fold_in(key, 999), 8, args.seq,
+    held_out = lm_sequences(jax.random.fold_in(key, 999), 8, seq,
                             cfg.vocab, skew_topic=1)
     eval_jit = jax.jit(loss_fn)
 
@@ -70,15 +97,19 @@ def main() -> None:
     sim = FederatedSimulation(lambda p, b: loss_fn(p, b), params, fed,
                               batcher, eval_fn=eval_ppl,
                               t_max=max(args.rounds, 1))
-    ckpt_cb = checkpoint.save_every(args.ckpt, every=10)
+    ckpt_cb = checkpoint.save_every(args.ckpt, every=args.eval_every)
     t0 = time.time()
-    for t in range(args.rounds):
-        hist = sim.run(1)
-        ckpt_cb(t + 1, sim.params)
-        if t % 5 == 0 or t == args.rounds - 1:
-            print(f"round {t + 1:3d}  train loss {hist.loss[-1]:.4f}  "
-                  f"held-out ppl {hist.metric[-1]:.1f}  "
-                  f"({time.time() - t0:.0f}s)", flush=True)
+    done = 0
+    while done < args.rounds:
+        r = min(args.eval_every, args.rounds - done)
+        # r rounds = ONE scanned, donated device chunk (core/engine.py);
+        # the host syncs only here, at the eval/checkpoint boundary
+        hist = sim.run(r, eval_every=r)
+        done += r
+        ckpt_cb(done, sim.params)
+        print(f"round {done:3d}  train loss {hist.loss[-1]:.4f}  "
+              f"held-out ppl {hist.metric[-1]:.1f}  "
+              f"({time.time() - t0:.0f}s)", flush=True)
     final = eval_ppl(sim.params)
     print(f"\nfinal held-out perplexity: {final:.1f} "
           f"(uniform baseline {cfg.vocab})")

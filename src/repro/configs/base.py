@@ -258,6 +258,13 @@ class FedConfig:
     # calibrated-update kernels, every aggregator/server op is a single
     # (M, P)-row einsum, and the pytree materializes only at the loss.
     param_layout: Literal["tree", "flat"] = "tree"
+    # mixed precision on the flat layout (DESIGN.md §13): dtype of the
+    # MASTER flat buffer all round state lives in, independent of the
+    # per-leaf view dtypes the model computes in.  "" keeps the spec's
+    # inferred dtype (= the leaf dtype).  The production LM configuration
+    # is bf16 params/compute + "float32" master: every view read is the
+    # only f32→bf16 crossing, updates and ν state apply at f32.
+    master_dtype: Literal["", "float32", "bfloat16", "float16"] = ""
     # -- failure scenarios (fed/scenarios.py, DESIGN.md §12) ------------------
     # "baseline" leaves both engines on their unperturbed (golden-pinned)
     # paths; other names inject faults as pure functions of
@@ -290,6 +297,13 @@ class FedConfig:
         _check("algorithm", self.algorithm, ALGORITHMS)
         _check("cohort_sampler", self.cohort_sampler, SAMPLERS)
         _check("param_layout", self.param_layout, ("tree", "flat"))
+        _check("master_dtype", self.master_dtype,
+               ("", "float32", "bfloat16", "float16"))
+        if self.master_dtype and self.param_layout != "flat":
+            raise ValueError(
+                f"master_dtype={self.master_dtype!r} requires "
+                f"param_layout='flat' (the master buffer IS the flat "
+                f"buffer); the tree layout keeps per-leaf dtypes")
         _check("server_opt", self.server_opt, SERVER_OPTIMIZERS)
         _check("scenario", self.scenario, SCENARIOS)
         _check("staleness", self.staleness, ("constant", "hinge", "poly"))

@@ -25,10 +25,16 @@ buffer and runs the *entire* round on flat state:
   ``(M, P)`` matrix flows through ``AGGREGATORS`` / ``SELECTORS`` /
   ``SERVER_OPTIMIZERS`` as a one-leaf tree and every per-leaf einsum
   becomes a single ``(M, P)``-row einsum;
-* the pytree is materialized ONLY at the ``value_and_grad`` loss boundary
-  (``unravel`` = static slices + reshapes, which XLA folds into the loss
-  computation) — gradients come back through the transpose as one flat
-  concatenation.
+* the loss boundary is **flat-native** (DESIGN.md §13): the model apply
+  consumes per-leaf *views* of the buffer — ``view_tree`` slices each leaf
+  at its spec offset (``FlatSpec.offsets``, the view table) and casts to
+  the leaf dtype — and ``flat_value_and_grad`` differentiates with respect
+  to the views, accumulating the leaf cotangents straight back into ONE
+  ``(P,)`` buffer (``flat_cotangent``, a region-write chain).  The round
+  never holds the parameter tree as a value: the caller sees only the
+  buffer, and a mixed-precision run (``master_dtype``) keeps the master
+  buffer in f32 while every view — and therefore all model compute — is
+  bf16, the cast riding the boundary slice instead of a separate pass.
 
 Numerics: every stage performs the same elementwise arithmetic in the
 same order as the tree round, only on a different memory layout.  The
@@ -72,7 +78,15 @@ class FlatSpec:
 
     ``n`` true elements, lane-padded to ``p`` (multiple of kernel.LANES);
     ``dtype`` is the shared buffer dtype — the common leaf dtype when the
-    tree is uniform (bf16 state stays bf16-sized), f32 otherwise.
+    tree is uniform (bf16 state stays bf16-sized), f32 otherwise, or the
+    explicit ``master_dtype`` override (mixed precision: f32 master buffer
+    over bf16 leaves, DESIGN.md §13).
+
+    ``(offsets, shapes, dtypes, sizes)`` together form the **view table**:
+    leaf *i* of the tree is ``flat[…, offsets[i] : offsets[i] + sizes[i]]``
+    reshaped to ``shapes[i]`` and cast to ``dtypes[i]``.  Offsets are
+    static, lane-padding lives entirely in the tail ``[n, p)`` — no view
+    ever overlaps the pad, so padding-preserving stages keep it zero.
     """
     shapes: tuple[tuple[int, ...], ...]
     dtypes: tuple[Any, ...]
@@ -81,19 +95,41 @@ class FlatSpec:
     n: int
     p: int
     dtype: Any
+    offsets: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.offsets and self.sizes:
+            # derive the view table for specs built positionally (older
+            # call sites / tests): cumulative leaf offsets
+            object.__setattr__(
+                self, "offsets",
+                tuple(int(o) for o in
+                      np.concatenate([[0], np.cumsum(self.sizes)[:-1]])))
 
 
-def make_flat_spec(tree: PyTree) -> FlatSpec:
-    """Build the spec from a concrete or abstract (eval_shape'd) tree."""
+def make_flat_spec(tree: PyTree,
+                   master_dtype: Optional[Any] = None) -> FlatSpec:
+    """Build the spec from a concrete or abstract (eval_shape'd) tree.
+
+    ``master_dtype`` overrides the buffer dtype (the *master* copy all
+    round state lives in) without touching the per-leaf view dtypes — the
+    mixed-precision configuration is bf16 leaves + f32 master: views read
+    bf16, updates apply at f32, one rounding per boundary crossing."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(tuple(lv.shape) for lv in leaves)
     dtypes = tuple(jnp.dtype(lv.dtype) for lv in leaves)
     sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in
+                    np.concatenate([[0], np.cumsum(sizes)[:-1]])
+                    ) if sizes else ()
     n = int(sum(sizes))
     p = -(-max(n, 1) // LANES) * LANES
-    dtype = dtypes[0] if all(d == dtypes[0] for d in dtypes) \
-        else jnp.dtype(jnp.float32)
-    return FlatSpec(shapes, dtypes, sizes, treedef, n, p, dtype)
+    if master_dtype is not None:
+        dtype = jnp.dtype(master_dtype)
+    else:
+        dtype = dtypes[0] if all(d == dtypes[0] for d in dtypes) \
+            else jnp.dtype(jnp.float32)
+    return FlatSpec(shapes, dtypes, sizes, treedef, n, p, dtype, offsets)
 
 
 def ravel(spec: FlatSpec, tree: PyTree, client_dims: int = 0) -> jax.Array:
@@ -138,6 +174,110 @@ def unravel(spec: FlatSpec, flat: jax.Array, client_dims: int = 0) -> PyTree:
         leaves.append(piece.reshape(lead + shape).astype(dtype))
         off += size
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# view table: flat-native model apply (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def leaf_view(spec: FlatSpec, flat: jax.Array, i: int,
+              client_dims: int = 0) -> jax.Array:
+    """Leaf ``i`` as a view of the buffer: ``dynamic_slice`` at the view
+    table's static offset, reshaped to the leaf shape and cast to the leaf
+    dtype.  A contiguous slice of a contiguous buffer reshapes without
+    moving data, so XLA folds the view into its consumer."""
+    lead = tuple(flat.shape[:client_dims])
+    piece = jax.lax.dynamic_slice_in_dim(flat, spec.offsets[i],
+                                         spec.sizes[i], axis=-1)
+    return piece.reshape(lead + spec.shapes[i]).astype(spec.dtypes[i])
+
+
+def view_tree(spec: FlatSpec, flat: jax.Array,
+              client_dims: int = 0) -> PyTree:
+    """The model pytree as per-leaf VIEWS of the flat buffer — what the
+    apply function consumes in place of real parameters.  Numerically this
+    is ``unravel``; structurally it is the read half of the flat-native
+    loss boundary: ``flat_value_and_grad`` differentiates with respect to
+    these views (never through the slices), so the round's only tree is
+    the transient one inside the loss jaxpr."""
+    leaves = [leaf_view(spec, flat, i, client_dims)
+              for i in range(len(spec.sizes))]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def flat_cotangent(spec: FlatSpec, tree: PyTree,
+                   client_dims: int = 0) -> jax.Array:
+    """Accumulate per-leaf cotangents into ONE ``(*lead, P)`` buffer at the
+    master dtype — the write half of the flat-native boundary.  A
+    ``dynamic_update_slice`` chain (one region write per leaf, the
+    ``ravel_rows`` rationale) rather than the slice-transpose pad+add
+    chain ``jax.grad``-through-``view_tree`` would emit; the pad tail
+    stays exactly zero."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    lead = tuple(leaves[0].shape[:client_dims])
+    buf = jnp.zeros(lead + (spec.p,), spec.dtype)
+    zeros = (0,) * len(lead)
+    for lv, off in zip(leaves, spec.offsets):
+        rows = lv.astype(spec.dtype).reshape(lead + (-1,))
+        buf = jax.lax.dynamic_update_slice(buf, rows, zeros + (off,))
+    return buf
+
+
+def flat_apply(spec: FlatSpec, apply_fn: Callable, flat_params: jax.Array,
+               *args, client_dims: int = 0, **kwargs):
+    """Run a tree-signature model function on the flat buffer:
+    ``apply_fn(params_tree, *args, **kwargs)`` with ``params_tree`` the
+    view table's slices of ``flat_params`` — e.g.
+    ``flat_apply(spec, functools.partial(lm_loss, cfg=cfg), buf, batch)``.
+    The caller never materializes or owns the tree."""
+    return apply_fn(view_tree(spec, flat_params, client_dims), *args,
+                    **kwargs)
+
+
+def flat_value_and_grad(spec: FlatSpec,
+                        loss_fn: Callable[[PyTree, PyTree], jax.Array]):
+    """``vag(flat_row, batch) -> (loss, flat_grad_row)`` — the flat-native
+    ``value_and_grad``: loss evaluated on buffer views, gradient returned
+    as one ``(P,)`` cotangent buffer.
+
+    Differentiation is with respect to the *views* (the tree), not the
+    buffer: the boundary slices/casts sit outside the differentiated
+    function, so their transposes (per-leaf pad+add on the full buffer)
+    never appear; the cotangent re-enters the flat layout through
+    ``flat_cotangent``'s region writes.  With leaf dtype == master dtype
+    this is op-for-op the classic unravel→grad→ravel boundary (the golden
+    pins hold bit-for-bit); under ``master_dtype`` mixed precision the
+    view cast is the ONLY f32→bf16 crossing and the cotangent accumulates
+    at master (f32) precision."""
+    vag = jax.value_and_grad(loss_fn)
+
+    def run(flat_row: jax.Array, batch: PyTree):
+        loss, g = vag(view_tree(spec, flat_row), batch)
+        return loss, flat_cotangent(spec, g)
+
+    return run
+
+
+def quantize_int8_flat(spec: FlatSpec, mat: jax.Array) -> jax.Array:
+    """``stages.quantize_int8`` natively on ``(M, P)`` rows: the scale is
+    per-client-per-LEAF, so each view-table segment quantizes against its
+    own row-wise amax — segment slices in, region writes out, keeping the
+    exact tree semantics (amax is order-exact; the round/scale arithmetic
+    runs in f32 and re-rounds through the leaf dtype) without the
+    unravel→quantize→ravel tree round-trip the flat transmit used to pay.
+    The pad tail is untouched (zeros)."""
+    m = mat.shape[0]
+    out = jnp.zeros((m, spec.p), spec.dtype)
+    for off, size, dtype in zip(spec.offsets, spec.sizes, spec.dtypes):
+        seg = jax.lax.dynamic_slice_in_dim(mat, off, size, axis=-1)
+        a = seg.astype(dtype)                       # the tree path's leaf
+        af = a.astype(jnp.float32)
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(af), axis=-1, keepdims=True) / 127.0, 1e-12)
+        q = (jnp.round(af / scale) * scale).astype(dtype)
+        out = jax.lax.dynamic_update_slice(
+            out, q.astype(spec.dtype), (0, off))
+    return out
 
 
 def flatten_state(spec: FlatSpec, state: dict) -> dict:
@@ -196,8 +336,10 @@ def make_flat_client_update(spec: FlatSpec,
     dispatches — the Pallas kernel on TPU (``use_pallas``), its jnp
     oracle with the K_i mask folded in as a per-row step size elsewhere
     (interpret-mode Pallas lowers to ~19 HLO ops of grid bookkeeping,
-    pure overhead inside a scanned round).  The pytree exists only inside
-    the per-step ``value_and_grad`` (``unravel`` in, ``ravel_rows`` out).
+    pure overhead inside a scanned round).  The per-step loss boundary is
+    flat-native: ``flat_value_and_grad`` evaluates the loss on view-table
+    slices of the row and returns the gradient as a (P,) cotangent buffer
+    — the tree exists only inside the loss jaxpr (DESIGN.md §13).
 
     The per-row η mask doubles as the **effective-steps mask** of
     partial-work recovery (fed/scenarios.py, DESIGN.md §12): a mid-round
@@ -245,17 +387,11 @@ def make_flat_client_update(spec: FlatSpec,
                 t = t + algo.prox_mu * (xf - anchors.astype(jnp.float32))
             return (xf - eta * t).astype(x.dtype)
 
-    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
-
-    def grad_fn(x: jax.Array, batch: PyTree):
-        """Per-client losses + FLAT gradient rows.  The pytree exists only
-        between these two lines; gradients re-enter the flat layout via
-        ``ravel_rows`` (one buffer, region writes) rather than by
-        differentiating through ``unravel`` — the transpose of a slice is
-        a pad, and a per-leaf pad+add chain on (M, P) costs more than the
-        whole fused update."""
-        loss, g = vgrad(unravel(spec, x, 1), batch)
-        return loss, ravel_rows(spec, g)
+    # flat-native loss boundary (DESIGN.md §13): losses on buffer VIEWS,
+    # gradients straight back as (M, P) cotangent rows — the round never
+    # holds the parameter tree, and under master_dtype mixed precision the
+    # view cast is the only master→compute crossing
+    grad_fn = jax.vmap(flat_value_and_grad(spec, loss_fn))
 
     def run(anchor, c_all, batches, k_steps, lam):
         m = k_steps.shape[0]
@@ -320,8 +456,9 @@ def _flat_transmit(spec: FlatSpec, algo: Algorithm, params0, x_i, g0_i,
                    anchor_i=None):
     """``stages.orientation_transmit`` on flat matrices.  The stage
     functions are array-polymorphic so this is a thin wrapper — except
-    int8 fake-quantization, whose scale is per-client-per-LEAF: the flat
-    transmit round-trips through the tree there to keep the semantics."""
+    int8 fake-quantization, whose scale is per-client-per-LEAF:
+    ``quantize_int8_flat`` runs it segment-wise on the view table (exact
+    tree semantics, no unravel→ravel round-trip)."""
     if quantize_transmit:
         if track_nu == "explicit":
             avg_g = acc_i
@@ -330,8 +467,7 @@ def _flat_transmit(spec: FlatSpec, algo: Algorithm, params0, x_i, g0_i,
                                             lam, anchor_i=anchor_i)
         transmit = stages.SELECTORS[algo.selector](
             g0_i, avg_g, stages.fast_mask(kf, kbar))
-        transmit = ravel_rows(
-            spec, stages.quantize_int8(unravel(spec, transmit, 1)))
+        transmit = quantize_int8_flat(spec, transmit)
         return transmit, avg_g
     return stages.orientation_transmit(
         algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,

@@ -1,14 +1,16 @@
 from repro.data.partition import (dirichlet_partition, gaussian_k_schedule,
                                   iid_partition, shard_partition)
-from repro.data.pipeline import (DeviceBatcher, FederatedBatcher,
-                                 LMFederatedBatcher, eval_metric)
+from repro.data.pipeline import (DeviceBatcher, DeviceLMBatcher,
+                                 FederatedBatcher, LMFederatedBatcher,
+                                 eval_metric)
 from repro.data.synthetic import (Dataset, fedprox_synthetic,
                                   gaussian_classification,
                                   image_classification, lm_sequences,
                                   quadratic_clients, token_stream)
 
 __all__ = [
-    "Dataset", "DeviceBatcher", "FederatedBatcher", "LMFederatedBatcher",
+    "Dataset", "DeviceBatcher", "DeviceLMBatcher", "FederatedBatcher",
+    "LMFederatedBatcher",
     "dirichlet_partition", "fedprox_synthetic",
     "eval_metric", "gaussian_classification", "gaussian_k_schedule",
     "iid_partition", "image_classification", "lm_sequences",

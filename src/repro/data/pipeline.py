@@ -215,6 +215,60 @@ class DeviceBatcher:
         return self.sample(jnp.int32(t), k_max)
 
 
+class DeviceLMBatcher:
+    """Device-resident LM token sampler: the ``DeviceBatcher`` contract
+    (traceable ``sample`` / ``sample_row`` / ``sample_cohort`` drawn
+    per-``(seed, round, client)`` with ``jax.random`` inside the scanned
+    chunk) over per-client token streams — what lets the real LM configs
+    run on the chunked sync engine, the cohort engine AND the buffered-
+    async engine (which needs ``sample_row``; the host
+    ``LMFederatedBatcher`` has no per-row API).  Streams of unequal length
+    pad into one rectangular (M, N_max, S) tensor; pad rows are never
+    drawn (``idx < sizes[i]``).  NOT bit-matched to the numpy host
+    batcher (different RNG), same as ``DeviceBatcher``."""
+
+    def __init__(self, streams: list[dict], batch_size: int, seed: int = 0):
+        self.m = len(streams)
+        self.batch_size = batch_size
+        self.seed = seed
+        sizes = np.array([np.asarray(s["tokens"]).shape[0]
+                          for s in streams], np.int64)
+        self.weights = jnp.asarray(sizes / sizes.sum(), jnp.float32)
+        n_max = int(sizes.max())
+        seq = np.asarray(streams[0]["tokens"]).shape[1]
+        toks = np.zeros((self.m, n_max, seq), np.int32)
+        labs = np.zeros((self.m, n_max, seq), np.int32)
+        for i, s in enumerate(streams):
+            toks[i, :sizes[i]] = np.asarray(s["tokens"])
+            labs[i, :sizes[i]] = np.asarray(s["labels"])
+        self._toks = jnp.asarray(toks)
+        self._labs = jnp.asarray(labs)
+        self._sizes = jnp.asarray(sizes, jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+
+    def sample_row(self, t, i, k_max: int) -> dict:
+        """One client's (k_max, B, S) microbatches for wave ``t``."""
+        key = jax.random.fold_in(jax.random.fold_in(self._key, t), i)
+        idx = jax.random.randint(key, (k_max, self.batch_size), 0,
+                                 self._sizes[i])
+        return {"tokens": self._toks[i, idx], "labels": self._labs[i, idx]}
+
+    def sample(self, t, k_max: int) -> dict:
+        """(M, k_max, B, S) full wave; row ``i`` == ``sample_row(t, i)``."""
+        return jax.vmap(lambda i: self.sample_row(t, i, k_max))(
+            jnp.arange(self.m))
+
+    def sample_cohort(self, t, cohort, k_max: int) -> dict:
+        """(C, k_max, B, S) for a sampled cohort; a client's draw is
+        independent of cohort membership (DESIGN.md §10)."""
+        return jax.vmap(lambda i: self.sample_row(t, i, k_max))(cohort)
+
+    # -- host-compatible API (eager; the chunk_rounds=1 path) ---------------
+
+    def round_batches(self, t: int, k_max: int) -> dict:
+        return self.sample(jnp.int32(t), k_max)
+
+
 def eval_metric(metric_fn: Callable, params, data: Dataset,
                 batch: int = 1024) -> float:
     """Mean of ``metric_fn(params, {"x","y"})`` over the dataset."""

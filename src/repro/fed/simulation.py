@@ -111,8 +111,9 @@ class FederatedSimulation:
             raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
                              f"choose 'tree' or 'flat'")
         self.layout = fed.param_layout
-        self._spec = (flat.make_flat_spec(params)
-                      if self.layout == "flat" else None)
+        self._spec = (flat.make_flat_spec(
+            params, master_dtype=fed.master_dtype or None)
+            if self.layout == "flat" else None)
         if self.layout == "flat":
             params = flat.ravel(self._spec, params)
         self.state = rounds.init_state(params, fed.n_clients, self.algo)

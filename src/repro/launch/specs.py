@@ -285,6 +285,17 @@ def _flat_axis(mesh, p: int):
     return maxes if len(maxes) > 1 else maxes[0]
 
 
+def flat_param_pspec(mesh, p: int, client_dims: int = 0) -> P:
+    """PartitionSpec of ONE ``(…, P)`` flat buffer: client rows over the
+    data axes, the flat axis over the model axes — the single rule
+    ``flat_state_pspecs`` applies per state entry, exposed for the flat
+    round's in-scan param_constraint (launch/train.py)."""
+    fx = _flat_axis(mesh, p)
+    cl = data_axes(mesh)
+    cl = (cl if len(cl) > 1 else cl[0]) if cl else None
+    return P(cl, fx) if client_dims else P(fx)
+
+
 def flat_state_pspecs(state: PyTree, mesh, p: int) -> PyTree:
     """Sharding for the FLAT round state: every (P,) server vector shards
     its single axis over the model axes; the (M, P) ν⁽ⁱ⁾ matrix shards
@@ -305,10 +316,12 @@ def flat_state_pspecs(state: PyTree, mesh, p: int) -> PyTree:
 
 
 def flat_train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                     algo: Algorithm, k_max: int = 4) -> dict:
+                     algo: Algorithm, k_max: int = 4,
+                     master_dtype=None) -> dict:
     """``train_specs`` for ``param_layout="flat"``: same batch stand-ins,
     but the round state collapses to (P,) / (M, P) buffers described by
-    ``core.flat.make_flat_spec`` of the abstract parameter tree."""
+    ``core.flat.make_flat_spec`` of the abstract parameter tree
+    (``master_dtype`` = the mixed-precision master-buffer override)."""
     from repro.core import flat as flat_lib
 
     m = n_clients(mesh)
@@ -317,7 +330,8 @@ def flat_train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
     micro = _client_batch(cfg, b_local, shape.seq_len, labels=True)
     batches = jax.tree.map(
         lambda x: _sds((m, k_max) + x.shape, x.dtype), micro)
-    fspec = flat_lib.make_flat_spec(abstract_params(cfg))
+    fspec = flat_lib.make_flat_spec(abstract_params(cfg),
+                                    master_dtype=master_dtype)
     state = jax.eval_shape(
         lambda: rounds.init_state(jnp.zeros((fspec.p,), fspec.dtype), m,
                                   algo))

@@ -51,6 +51,17 @@ def make_param_constraint(mesh):
     return constraint
 
 
+def make_flat_param_constraint(mesh, p: int):
+    """Flat twin of ``make_param_constraint``: ONE sharding rule for every
+    ``(…, P)`` buffer (specs_lib.flat_param_pspec) instead of the per-leaf
+    name-aware table."""
+    def constraint(arr, client_dims: int):
+        ps = specs_lib.flat_param_pspec(mesh, p, client_dims)
+        return jax.lax.with_sharding_constraint(arr,
+                                                NamedSharding(mesh, ps))
+    return constraint
+
+
 def build_train_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
                       fed: FedConfig, *, k_max: int = 4,
                       chunk_rounds: int = 1):
@@ -59,17 +70,33 @@ def build_train_round(cfg: ModelConfig, shape: ShapeConfig, mesh,
     ``chunk_rounds > 1`` returns the scanned R-round chunk instead —
     ``chunk(state, batches, k_steps, weights, lam)`` with every input
     stacked per round (leading ``(R,)``), one dispatch and one host sync
-    per chunk (DESIGN.md §9)."""
+    per chunk (DESIGN.md §9).
+
+    ``fed.param_layout="flat"`` builds the single-buffer round
+    (core/flat.py): state is (P,)/(M, P) flat buffers (the bundle carries
+    ``flat_spec``), the model consumes view-table slices of the buffer
+    (DESIGN.md §13), and ``fed.master_dtype`` keeps an f32 master over
+    bf16 compute."""
     algo = get_algorithm(fed.algorithm, fed)
     set_mesh_rules(mesh, mesh_rules(mesh, kind="train"))
 
     loss_fn = functools.partial(lm_loss, cfg=cfg)
-    round_fn = rounds.make_round(
-        lambda p, b: loss_fn(p, b), algo, lr=fed.lr, k_max=k_max,
-        spmd_axis_name=data_axes(mesh) or None,
-        param_constraint=make_param_constraint(mesh))
-
-    bundle = specs_lib.train_specs(cfg, shape, mesh, algo, k_max=k_max)
+    if fed.param_layout == "flat":
+        from repro.core import flat as flat_lib
+        bundle = specs_lib.flat_train_specs(
+            cfg, shape, mesh, algo, k_max=k_max,
+            master_dtype=fed.master_dtype or None)
+        fspec = bundle["flat_spec"]
+        round_fn = flat_lib.make_flat_round(
+            fspec, lambda p, b: loss_fn(p, b), algo, lr=fed.lr,
+            k_max=k_max,
+            param_constraint=make_flat_param_constraint(mesh, fspec.p))
+    else:
+        round_fn = rounds.make_round(
+            lambda p, b: loss_fn(p, b), algo, lr=fed.lr, k_max=k_max,
+            spmd_axis_name=data_axes(mesh) or None,
+            param_constraint=make_param_constraint(mesh))
+        bundle = specs_lib.train_specs(cfg, shape, mesh, algo, k_max=k_max)
     if chunk_rounds > 1:
         # sharding layouts are pinned by the in-scan param_constraint;
         # stacked inputs keep their per-round specs on the trailing axes.
@@ -186,6 +213,13 @@ def main() -> None:
                     help="rounds fused into one lax.scan dispatch "
                          "(core/engine.py; host syncs per chunk)")
     ap.add_argument("--algo", default="fedagrac")
+    ap.add_argument("--param-layout", choices=("tree", "flat"),
+                    default="tree",
+                    help="flat = single-buffer rounds with the view-table "
+                         "loss boundary (core/flat.py, DESIGN.md §13)")
+    ap.add_argument("--master-dtype", choices=("", "float32"), default="",
+                    help="flat-only: master-buffer dtype override "
+                         "(f32 master over bf16 compute)")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced model + tiny shape (CPU/dev runs)")
     args = ap.parse_args()
@@ -199,7 +233,9 @@ def main() -> None:
         shape = dataclasses.replace(shape, seq_len=128,
                                     global_batch=2 * n_clients(mesh))
     cfg = specs_lib.bf16_config(cfg) if not args.reduced else cfg
-    fed = FedConfig(algorithm=args.algo, lr=0.3 if args.reduced else 3e-2)
+    fed = FedConfig(algorithm=args.algo, lr=0.3 if args.reduced else 3e-2,
+                    param_layout=args.param_layout,
+                    master_dtype=args.master_dtype)
 
     with use_mesh(mesh):
         chunk = max(args.chunk_rounds, 1)
@@ -211,6 +247,9 @@ def main() -> None:
         from repro.models.model import init_params
         params = init_params(jax.random.PRNGKey(0), cfg)
         algo = get_algorithm(fed.algorithm, fed)
+        if args.param_layout == "flat":
+            from repro.core import flat as flat_lib
+            params = flat_lib.ravel(bundle["flat_spec"], params)
         state = rounds_lib.init_state(params, m, algo)
         sh = lambda t: specs_lib.to_shardings(t, mesh)
         ps = bundle["pspecs"]

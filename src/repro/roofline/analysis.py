@@ -145,16 +145,24 @@ def from_compiled(compiled, chips: int, model_flops: float = 0.0,
     return rl
 
 
-def layout_comparison(tree: Roofline, flat: Roofline) -> dict:
+def layout_comparison(tree: Roofline, flat: Roofline,
+                      conversion_bytes: Optional[float] = None) -> dict:
     """The flat-vs-tree layout win at the HLO level (DESIGN.md §11) —
     deterministic, unlike wall-clock on a shared-core container: compare
     the flat round's memory/collective bytes (and op count as a proxy for
     dispatch/scheduling load) NEXT TO the tree round's.  Ratios < 1 mean
     the single-buffer round moves fewer bytes / issues fewer ops for the
-    identical arithmetic."""
+    identical arithmetic.
+
+    ``conversion_bytes`` is the loss-boundary line item (DESIGN.md §13):
+    the extra HLO bytes the flat-native grad path moves over the plain
+    tree ``value_and_grad`` at the same round shape — the view-table
+    slices into the buffer plus the cotangent accumulation out of it.
+    Negative means the flat boundary moves FEWER bytes than the tree
+    boundary (e.g. when XLA fuses the slices into the consumers)."""
     coll_t = sum(tree.coll_bytes.values())
     coll_f = sum(flat.coll_bytes.values())
-    return {
+    out = {
         "tree_bytes": tree.bytes_accessed,
         "flat_bytes": flat.bytes_accessed,
         "bytes_ratio": (flat.bytes_accessed / tree.bytes_accessed
@@ -167,6 +175,12 @@ def layout_comparison(tree: Roofline, flat: Roofline) -> dict:
         "tree_t_collective_s": tree.t_collective,
         "flat_t_collective_s": flat.t_collective,
     }
+    if conversion_bytes is not None:
+        out["conversion_bytes"] = conversion_bytes
+        out["conversion_fraction_of_flat"] = (
+            conversion_bytes / flat.bytes_accessed
+            if flat.bytes_accessed else None)
+    return out
 
 
 def hlo_op_count(hlo_text: str) -> int:

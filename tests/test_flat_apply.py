@@ -1,0 +1,316 @@
+"""Flat-native model execution (core/flat.py view table, DESIGN.md §13).
+
+Three layers of pins:
+
+* **View table** — for every model config in the registry (reduced), each
+  leaf view round-trips through the flat buffer (offset/shape/dtype
+  exact, lane padding stays zero), including non-lane-multiple leaves and
+  the mixed-precision (bf16 leaves / f32 master) dtype rules.
+* **Boundary** — ``flat_value_and_grad`` matches the tree
+  ``value_and_grad`` at ulp tolerance and ``quantize_int8_flat`` matches
+  the per-client-per-leaf tree quantizer exactly.
+* **End-to-end** — real LM rounds (gemma-2b transformer + granite-moe
+  MoE, reduced) golden-pinned flat vs tree across the sync, cohort and
+  buffered-async engines at the flat-layout suite's ulp tolerance.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, reduced
+from repro.configs.registry import ARCHS, get_arch
+from repro.core import flat, stages
+from repro.core.flat import LANES
+from repro.data import DeviceLMBatcher, LMFederatedBatcher, lm_sequences
+from repro.fed import BufferedAsyncSimulation, FederatedSimulation
+from repro.models import model as M
+
+RTOL, ATOL = 1e-6, 1e-7
+
+
+def _tiny(name: str):
+    return reduced(get_arch(name), n_layers=2, d_model=64, vocab=256)
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _assert_tree_close(a, b, rtol=RTOL, atol=ATOL):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(pa, np.float64),
+                                   np.asarray(pb, np.float64),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# view table: every registry config
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_view_table_covers_every_registry_config(name):
+    """Offsets/shapes/dtypes of the view table tile [0, n) exactly, for
+    every architecture family's (reduced) parameter tree."""
+    cfg = _tiny(name)
+    spec = flat.make_flat_spec(_abstract_params(cfg))
+    leaves = jax.tree.leaves(_abstract_params(cfg))
+    assert len(spec.offsets) == len(leaves) > 0
+    expect = 0
+    for off, shape, size, dtype, lv in zip(spec.offsets, spec.shapes,
+                                           spec.sizes, spec.dtypes, leaves):
+        assert off == expect                    # contiguous, in tree order
+        assert shape == tuple(lv.shape)
+        assert dtype == lv.dtype
+        assert size == int(np.prod(shape, dtype=np.int64))
+        expect += size
+    assert expect == spec.n <= spec.p
+    assert spec.p % LANES == 0
+    # padding is the tail only — no view overlaps it
+    assert spec.offsets[-1] + spec.sizes[-1] == spec.n
+
+
+@pytest.mark.parametrize("name", ["gemma-2b", "granite-moe-1b-a400m",
+                                  "zamba2-2.7b", "xlstm-125m"])
+def test_leaf_views_round_trip(name):
+    """ravel → view_tree reproduces every leaf exactly; flat_cotangent of
+    the views reproduces the buffer (pad tail exactly zero)."""
+    cfg = _tiny(name)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    spec = flat.make_flat_spec(params)
+    buf = flat.ravel(spec, params)
+    views = flat.view_tree(spec, buf)
+    for got, want in zip(jax.tree.leaves(views), jax.tree.leaves(params)):
+        assert got.shape == want.shape and got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = flat.flat_cotangent(spec, views)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(buf))
+    assert not np.any(np.asarray(buf)[spec.n:])         # pad stays zero
+
+
+def test_view_table_non_lane_multiple_leaves():
+    """Leaves whose sizes are nowhere near LANES multiples still tile the
+    buffer contiguously; client-stacked (M, P) views round-trip too."""
+    tree = {"a": jnp.arange(15, dtype=jnp.float32).reshape(3, 5),
+            "w": {"b": jnp.ones((7,), jnp.float32),
+                  "c": jnp.full((2, 2, 3), 2.0, jnp.float32)}}
+    spec = flat.make_flat_spec(tree)
+    assert spec.n == 34 and spec.p == LANES and spec.n % LANES != 0
+    rows = jax.tree.map(lambda a: jnp.stack([a, 2 * a]), tree)
+    mat = flat.ravel(spec, rows, client_dims=1)
+    assert mat.shape == (2, LANES)
+    views = flat.view_tree(spec, mat, client_dims=1)
+    for got, want in zip(jax.tree.leaves(views), jax.tree.leaves(rows)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = flat.flat_cotangent(spec, views, client_dims=1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mat))
+    assert not np.any(np.asarray(mat)[:, spec.n:])
+
+
+def test_view_table_mixed_precision_dtypes():
+    """bf16 leaves under an f32 master: the buffer holds f32, every view
+    reads bf16 (exactly — bf16→f32→bf16 is lossless), the cotangent
+    accumulates at f32, and the pad stays zero."""
+    cfg = dataclasses.replace(_tiny("gemma-2b"), dtype="bfloat16")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    spec = flat.make_flat_spec(params, master_dtype=jnp.float32)
+    assert spec.dtype == jnp.dtype(jnp.float32)
+    assert all(d == jnp.dtype(jnp.bfloat16) for d in spec.dtypes)
+    buf = flat.ravel(spec, params)
+    assert buf.dtype == jnp.dtype(jnp.float32)
+    views = flat.view_tree(spec, buf)
+    for got, want in zip(jax.tree.leaves(views), jax.tree.leaves(params)):
+        assert got.dtype == jnp.dtype(jnp.bfloat16)
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32))
+    back = flat.flat_cotangent(spec, views)
+    assert back.dtype == jnp.dtype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(buf))
+    assert not np.any(np.asarray(buf)[spec.n:])
+
+
+# ---------------------------------------------------------------------------
+# the flat-native loss boundary
+# ---------------------------------------------------------------------------
+
+def test_flat_value_and_grad_matches_tree():
+    cfg = _tiny("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    spec = flat.make_flat_spec(params)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    batch = jax.tree.map(
+        lambda a: jnp.stack([a[:2], a[2:4]]),
+        lm_sequences(jax.random.PRNGKey(1), 4, 16, cfg.vocab))   # (2, 2, S)
+
+    rows = jnp.stack([flat.ravel(spec, params)] * 2)
+    loss_f, g_f = jax.jit(jax.vmap(flat.flat_value_and_grad(
+        spec, loss_fn)))(rows, batch)
+
+    def tree_grads(tr, b):
+        return jax.vmap(jax.value_and_grad(loss_fn))(tr, b)
+    trees = jax.tree.map(lambda a: jnp.stack([a] * 2), params)
+    loss_t, g_t = jax.jit(tree_grads)(trees, batch)
+
+    np.testing.assert_allclose(np.asarray(loss_f), np.asarray(loss_t),
+                               rtol=RTOL)
+    np.testing.assert_allclose(np.asarray(g_f, np.float64),
+                               np.asarray(flat.ravel_rows(spec, g_t),
+                                          np.float64),
+                               rtol=RTOL, atol=ATOL)
+    assert not np.any(np.asarray(g_f)[:, spec.n:])      # pad stays zero
+
+
+def test_flat_apply_matches_tree_loss():
+    cfg = _tiny("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    spec = flat.make_flat_spec(params)
+    batch = lm_sequences(jax.random.PRNGKey(1), 2, 16, cfg.vocab)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    got = jax.jit(lambda b, x: flat.flat_apply(spec, loss_fn, x, b))(
+        batch, flat.ravel(spec, params))
+    want = jax.jit(loss_fn)(params, batch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL)
+
+
+def test_quantize_int8_flat_matches_tree():
+    """Segment-wise flat int8 == unravel → stages.quantize_int8 → ravel
+    (the per-client-per-leaf scale semantics), bit-for-bit."""
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 4, 5)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(3, 7)).astype(np.float32) * 50)}
+    spec = flat.make_flat_spec(jax.tree.map(lambda a: a[0], tree))
+    mat = flat.ravel(spec, tree, client_dims=1)
+    got = jax.jit(lambda x: flat.quantize_int8_flat(spec, x))(mat)
+    want = flat.ravel_rows(spec, stages.quantize_int8(tree))
+    # ulp tolerance: XLA fuses the round/scale chain differently per layout
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64),
+                               rtol=RTOL, atol=ATOL)
+    assert not np.any(np.asarray(got)[:, spec.n:])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end LM golden pins: flat vs tree on every engine
+# ---------------------------------------------------------------------------
+
+M_CLIENTS, SEQ, BATCH = 3, 16, 2
+FAMILIES = ["gemma-2b", "granite-moe-1b-a400m"]     # transformer + MoE
+
+
+def _lm_setup(name, device=False):
+    cfg = _tiny(name)
+    key = jax.random.PRNGKey(0)
+    streams = [lm_sequences(jax.random.fold_in(key, i), 16, SEQ, cfg.vocab,
+                            skew_topic=i) for i in range(M_CLIENTS)]
+    make = DeviceLMBatcher if device else LMFederatedBatcher
+    batcher = make(streams, batch_size=BATCH)
+    params = M.init_params(key, cfg)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    return (lambda p, b: loss_fn(p, b)), params, batcher
+
+
+def _fed(layout, **kw):
+    base = dict(algorithm="fedagrac", n_clients=M_CLIENTS, k_mean=2,
+                lr=0.1, calibration_rate=0.5, param_layout=layout)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_lm_sync_flat_matches_tree(name):
+    final = {}
+    for layout in ("tree", "flat"):
+        loss_fn, params, batcher = _lm_setup(name)
+        sim = FederatedSimulation(loss_fn, params, _fed(layout), batcher,
+                                  t_max=2)
+        sim.run(2, eval_every=2)                 # one scanned chunk
+        final[layout] = sim.params
+    _assert_tree_close(final["flat"], final["tree"])
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_lm_cohort_flat_matches_tree(name):
+    final = {}
+    for layout in ("tree", "flat"):
+        loss_fn, params, batcher = _lm_setup(name)
+        fed = _fed(layout, cohort_size=2, cohort_sampler="uniform")
+        sim = FederatedSimulation(loss_fn, params, fed, batcher, t_max=2)
+        sim.run(2, eval_every=2)
+        final[layout] = sim.params
+    _assert_tree_close(final["flat"], final["tree"])
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_lm_async_flat_matches_tree(name):
+    final = {}
+    for layout in ("tree", "flat"):
+        loss_fn, params, batcher = _lm_setup(name)
+        fed = _fed(layout, buffer_size=2, staleness="poly",
+                   speed_dist="lognormal", speed_sigma=0.5)
+        sim = BufferedAsyncSimulation(loss_fn, params, fed, batcher)
+        sim.run(3)
+        final[layout] = sim.params
+    _assert_tree_close(final["flat"], final["tree"])
+
+
+def test_lm_device_sampler_flat_matches_tree():
+    """DeviceLMBatcher draws inside the scanned chunk identically under
+    both layouts — the real-LM device path pin."""
+    final = {}
+    for layout in ("tree", "flat"):
+        loss_fn, params, batcher = _lm_setup("gemma-2b", device=True)
+        sim = FederatedSimulation(loss_fn, params, _fed(layout), batcher,
+                                  t_max=2)
+        sim.run(2, eval_every=2)
+        final[layout] = sim.params
+    _assert_tree_close(final["flat"], final["tree"])
+
+
+def test_device_lm_batcher_row_consistency():
+    """sample / sample_cohort rows equal sample_row — the invariant that
+    makes chunk splits, cohorts and async dispatches draw identically."""
+    _, _, b = _lm_setup("gemma-2b", device=True)
+    full = b.sample(jnp.int32(3), 2)
+    cohort = b.sample_cohort(jnp.int32(3), jnp.asarray([2, 0]), 2)
+    for i in range(M_CLIENTS):
+        row = b.sample_row(jnp.int32(3), jnp.int32(i), 2)
+        np.testing.assert_array_equal(np.asarray(full["tokens"][i]),
+                                      np.asarray(row["tokens"]))
+    np.testing.assert_array_equal(np.asarray(cohort["tokens"][1]),
+                                  np.asarray(full["tokens"][0]))
+
+
+def test_lm_bf16_master_round_trains():
+    """Mixed precision end-to-end: bf16 params/compute, f32 master buffer
+    — state stays f32, padding stays zero, the loss moves."""
+    cfg = dataclasses.replace(_tiny("gemma-2b"), dtype="bfloat16")
+    key = jax.random.PRNGKey(0)
+    streams = [lm_sequences(jax.random.fold_in(key, i), 16, SEQ, cfg.vocab,
+                            skew_topic=i) for i in range(M_CLIENTS)]
+    batcher = LMFederatedBatcher(streams, batch_size=BATCH)
+    params = M.init_params(key, cfg)
+    loss_fn = functools.partial(M.lm_loss, cfg=cfg)
+    fed = _fed("flat", master_dtype="float32", lr=0.3)
+    sim = FederatedSimulation(lambda p, b: loss_fn(p, b), params, fed,
+                              batcher, t_max=4)
+    hist = sim.run(4, eval_every=2)
+    assert sim.state["params"].dtype == jnp.dtype(jnp.float32)
+    assert sim.state["nu"].dtype == jnp.dtype(jnp.float32)
+    spec = sim._spec
+    assert not np.any(np.asarray(sim.state["params"])[spec.n:])
+    out = sim.params                              # unravels to bf16 leaves
+    assert all(lv.dtype == jnp.dtype(jnp.bfloat16)
+               for lv in jax.tree.leaves(out))
+    assert np.isfinite(hist.loss).all() and hist.loss[-1] < hist.loss[0]
+
+
+def test_master_dtype_requires_flat_layout():
+    with pytest.raises(ValueError, match="master_dtype"):
+        FedConfig(master_dtype="float32", param_layout="tree")
+    with pytest.raises(ValueError, match="unknown master_dtype"):
+        FedConfig(master_dtype="int8", param_layout="flat")
