@@ -1,0 +1,176 @@
+"""Communication-efficient rounds: compressor sweep with bytes accounting.
+
+Claim validated (DESIGN.md §14): with error feedback, the aggressive
+compressors deliver a ≥4× uplink-bytes reduction at accuracy parity with
+fp32 on the quickstart workload — bytes-to-target, not rounds-to-target,
+is the cross-device cost model, and FedaGrac ships TWO quantities per
+report (delta + ν), so the wire win applies twice per client.
+
+Sweep: compressor × algorithm × {sync, async}.  Per row: final accuracy,
+measured uplink bytes/round (``History.bytes_up``, pinned against the
+analytic ``roofline.analysis.bytes_on_the_wire`` model), uplink reduction
+vs fp32, rounds-to-target, bytes-to-target.  Also asserts that
+``compressor="none"`` leaves the round BIT-IDENTICAL to a config without
+compression (the CI quick-gate twin of tests/test_compression.py's
+nine-algorithm pin).  ``BENCH_compression.json`` at the repo root is the
+tracked artifact (CI uploads it).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import bimodal_schedule, emit, make_task
+from repro.configs.base import FedConfig
+from repro.fed import BufferedAsyncSimulation, FederatedSimulation
+from repro.fed.clock import make_clock
+from repro.roofline.analysis import bytes_on_the_wire
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+COMPRESSORS = ("none", "int8", "int4", "topk", "topk+int8")
+TARGET = 0.70        # reached by every engine on this track (0.77 is not)
+PARITY = 0.01        # |acc − fp32 acc| tolerance for the headline
+
+
+def _fed(task, algorithm, compressor, **kw):
+    return FedConfig(algorithm=algorithm, n_clients=task.batcher.m,
+                     lr=task.lr, calibration_rate=1.0, weights="data",
+                     compressor=compressor, **kw)
+
+
+def _run_sync(algorithm, compressor, t):
+    task = make_task("lr", noniid=True)
+    sim = FederatedSimulation(task.loss_fn, task.params,
+                              _fed(task, algorithm, compressor),
+                              task.batcher, eval_fn=task.eval_fn,
+                              k_schedule=bimodal_schedule())
+    return sim, sim.run(t)
+
+
+def _run_async(algorithm, compressor, t_updates):
+    task = make_task("lr", noniid=True)
+    m = task.batcher.m
+    fed = _fed(task, algorithm, compressor, buffer_size=m // 2,
+               staleness="hinge", staleness_a=0.5, staleness_b=2)
+    clock = make_clock(m, dist="lognormal", sigma=1.0, seed=7)
+    sim = BufferedAsyncSimulation(task.loss_fn, task.params, fed,
+                                  task.batcher, eval_fn=task.eval_fn,
+                                  clock=clock)
+    return sim, sim.run(t_updates)
+
+
+def _assert_none_is_golden(t: int) -> None:
+    """compressor="none" must bake the literally unchanged round: state
+    after t rounds is BIT-identical to a config with no compression
+    fields touched (uplink + downlink, sync engine)."""
+    states = []
+    for kw in ({}, {"compressor": "none", "broadcast_compressor": "none"}):
+        task = make_task("lr", noniid=True)
+        fed = FedConfig(algorithm="fedagrac", n_clients=task.batcher.m,
+                        lr=task.lr, calibration_rate=1.0, weights="data",
+                        **kw)
+        sim = FederatedSimulation(task.loss_fn, task.params, fed,
+                                  task.batcher,
+                                  k_schedule=bimodal_schedule())
+        sim.run(t)
+        states.append(sim.state)
+    ref, got = states
+    assert sorted(ref) == sorted(got), (sorted(ref), sorted(got))
+    for k in ref:
+        for a, b in zip(jax.tree.leaves(ref[k]), jax.tree.leaves(got[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=k)
+
+
+def run(quick: bool = False) -> tuple[list[tuple], dict]:
+    t_sync = 15 if quick else 50
+    t_async = 30 if quick else 100
+    algorithms = ("fedagrac",) if quick else ("fedagrac", "fedavg")
+
+    _assert_none_is_golden(5 if quick else 10)
+    print("# none-compression bit-identity: OK")
+
+    rows, report_rows = [], []
+    base_acc: dict[tuple, float] = {}
+    for mode in ("sync", "async"):
+        for algorithm in algorithms:
+            for comp in COMPRESSORS:
+                if mode == "sync":
+                    sim, hist = _run_sync(algorithm, comp, t_sync)
+                else:
+                    sim, hist = _run_async(algorithm, comp, t_async)
+                n = sim._spec.n if sim._spec is not None else sim._n_true
+                model = bytes_on_the_wire(
+                    n, uses_nu=sim.algo.uses_nu, compressor=comp,
+                    topk_frac=sim.fed.topk_frac)
+                # measured series must match the analytic model per client
+                participants = hist.bytes_up[0] / model["uplink_per_client"]
+                assert participants == round(participants), (
+                    comp, hist.bytes_up[0], model["uplink_per_client"])
+                acc = hist.metric[-1]
+                if comp == "none":
+                    base_acc[(mode, algorithm)] = acc
+                r_t = hist.rounds_to_target(TARGET)
+                b_t = hist.bytes_to_target(TARGET)
+                rows.append((mode, algorithm, comp, round(acc, 4),
+                             round(hist.bytes_up[0]),
+                             round(model["uplink_reduction"], 2),
+                             r_t or f">{len(hist.metric)}",
+                             round(b_t) if b_t is not None else "-"))
+                report_rows.append({
+                    "mode": mode, "algorithm": algorithm,
+                    "compressor": comp, "final_acc": float(acc),
+                    "bytes_up_per_round": float(hist.bytes_up[0]),
+                    "bytes_down_per_round": float(hist.bytes_down[0]),
+                    "uplink_reduction_vs_fp32":
+                        float(model["uplink_reduction"]),
+                    "rounds_to_target": r_t,
+                    "bytes_to_target": b_t,
+                    "target": TARGET,
+                })
+
+    # headline: best uplink reduction among compressors at accuracy parity
+    headline = None
+    for r in report_rows:
+        if r["compressor"] == "none":
+            continue
+        ref = base_acc[(r["mode"], r["algorithm"])]
+        if r["final_acc"] >= ref - PARITY:
+            if headline is None or (r["uplink_reduction_vs_fp32"]
+                                    > headline["uplink_reduction_vs_fp32"]):
+                headline = dict(r, fp32_acc=ref)
+    assert headline is not None and \
+        headline["uplink_reduction_vs_fp32"] >= 4.0, headline
+    print(f"# headline: {headline['compressor']} "
+          f"({headline['mode']}/{headline['algorithm']}) — "
+          f"{headline['uplink_reduction_vs_fp32']:.1f}× uplink reduction, "
+          f"acc {headline['final_acc']:.4f} vs fp32 "
+          f"{headline['fp32_acc']:.4f}")
+
+    report = {
+        "rows": report_rows,
+        "headline": headline,
+        "meta": {"quick": quick, "backend": jax.default_backend(),
+                 "jax": jax.__version__, "target": TARGET,
+                 "parity_tol": PARITY},
+    }
+    return rows, report
+
+
+def main(quick: bool = False) -> None:
+    rows, report = run(quick)
+    emit(rows, ("mode", "algorithm", "compressor", "final_acc",
+                "bytes_up_per_round", "uplink_reduction",
+                f"rounds_to_{int(TARGET * 100)}",
+                f"bytes_to_{int(TARGET * 100)}"))
+    out = ROOT / "BENCH_compression.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.kernels.calibrated_update import ref as cu_ref
 from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.quantize import ops as qops
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -116,6 +117,44 @@ def run(quick: bool = False) -> tuple[list[tuple], dict]:
          round(t_prox * 1e6, 1)),
         ("kernel", "flat_calibrated_update_prox_2d_gbps",
          round(gbps_prox, 2)),
+    ]
+
+    # wire-compression kernels (kernels/quantize/, DESIGN.md §14) on the
+    # same lane-padded layout the compression stage streams: quantize is
+    # 4R+1W bytes/elem (f32 in, int8 codes out), dequantize 1R+4W, the
+    # top-k mask 4R+4W; scale selection (row_scales) is timed separately —
+    # it is a reduction, not part of the streaming transform
+    scale = qops.row_scales(xm, 128, 127)
+    q_fn = jax.jit(lambda a, s: qops.quantize_2d(a, s, use_pallas=False))
+    dq_fn = jax.jit(lambda a, s: qops.dequantize_2d(a, s,
+                                                    use_pallas=False))
+    tk_fn = jax.jit(lambda a, th: qops.topk_mask_2d(a, th,
+                                                    use_pallas=False))
+    sc_fn = jax.jit(lambda a: qops.row_scales(a, 128, 127))
+    th = qops.topk_thresholds(xm, 128, 7)         # ~5% of a 128-lane row
+    qm = q_fn(xm, scale)
+    t_q = _timeit(q_fn, xm, scale)
+    t_dq = _timeit(dq_fn, qm, scale)
+    t_tk = _timeit(tk_fn, xm, th)
+    t_sc = _timeit(sc_fn, xm)
+    report["quantize_path"] = {
+        "rows": rows2d, "lanes": 128,
+        "quantize_int8_2d_us": t_q * 1e6,
+        "quantize_int8_2d_gbps": n2d * 5 / t_q / 1e9,
+        "dequantize_int8_2d_us": t_dq * 1e6,
+        "dequantize_int8_2d_gbps": n2d * 5 / t_dq / 1e9,
+        "topk_mask_2d_us": t_tk * 1e6,
+        "topk_mask_2d_gbps": n2d * 8 / t_tk / 1e9,
+        "row_scales_us": t_sc * 1e6,
+    }
+    rows += [
+        ("kernel", "quantize_int8_2d_gbps",
+         round(n2d * 5 / t_q / 1e9, 2)),
+        ("kernel", "dequantize_int8_2d_gbps",
+         round(n2d * 5 / t_dq / 1e9, 2)),
+        ("kernel", "topk_mask_2d_gbps",
+         round(n2d * 8 / t_tk / 1e9, 2)),
+        ("kernel", "row_scales_us", round(t_sc * 1e6, 1)),
     ]
 
     B, S, H, D = (1, 256, 4, 64) if quick else (2, 512, 8, 64)

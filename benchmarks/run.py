@@ -11,8 +11,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (ablation_int8_nu, engine_bench, fairness,
-                        fig2_lambda, fig3_orientation, fig4_grid,
+from benchmarks import (ablation_int8_nu, compression_bench, engine_bench,
+                        fairness, fig2_lambda, fig3_orientation, fig4_grid,
                         fig5_curves, kernel_bench, lm_bench,
                         population_bench, roofline_table, scenario_bench,
                         server_opt, table1_deterioration,
@@ -31,6 +31,7 @@ MODULES = {
     "fig5": fig5_curves,
     "kernel": kernel_bench,
     "int8_nu": ablation_int8_nu,
+    "compression": compression_bench,
     "fairness": fairness,
     "server_opt": server_opt,
     "roofline": roofline_table,

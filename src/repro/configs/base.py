@@ -279,11 +279,30 @@ class FedConfig:
     scenario_magnitude: float = 10.0       # spike slowdown × / flaky mean burst (s)
     scenario_period: float = 64.0          # diurnal availability period (rounds)
     rejoin_delay: float = 0.0              # post-abort downtime (simulated s)
+    # -- wire compression (core/compress.py, DESIGN.md §14) -------------------
+    # compressor: client→server payloads (parameter delta + ν transmit),
+    # broadcast_compressor: server→client broadcast (params + ν) — each one
+    # of the COMPRESSORS registry ("none" | "int8" | "int4" | "topk" |
+    # "topk+int8").  error_feedback carries per-client (M, P) residual
+    # accumulators in the round state (ê = C(v + e), e ← v + e − ê), so
+    # compression error is re-transmitted by the SAME client later instead
+    # of lost; topk_frac is the kept fraction k/n of the top-k compressors.
+    compressor: str = "none"
+    broadcast_compressor: str = "none"
+    error_feedback: bool = True
+    topk_frac: float = 0.05
+    # DEPRECATED: the old ν-only int8 fake-quant flag.  True maps onto
+    # compressor="int8" (which now compresses the delta AND ν, with error
+    # feedback) and warns; use compressor= directly.
+    quantize_transmit: bool = False
 
     def __post_init__(self):
         """Fail at construction, not as a registry KeyError inside jit:
         every registry-backed field is validated against its live registry
         (imported lazily — the registries live downstream of this module)."""
+        import warnings
+
+        from repro.core.compress import COMPRESSORS
         from repro.core.fedopt import ALGORITHMS
         from repro.core.stages import SERVER_OPTIMIZERS
         from repro.fed.population import SAMPLERS
@@ -293,6 +312,20 @@ class FedConfig:
             if value not in valid:
                 raise ValueError(f"unknown {field} {value!r}; valid "
                                  f"options: {sorted(valid)}")
+
+        if self.quantize_transmit:
+            warnings.warn(
+                "FedConfig.quantize_transmit is deprecated; use "
+                "compressor='int8' (first-class delta + ν compression with "
+                "error feedback, core/compress.py)", DeprecationWarning,
+                stacklevel=2)
+            if self.compressor == "none":
+                object.__setattr__(self, "compressor", "int8")
+        _check("compressor", self.compressor, COMPRESSORS)
+        _check("broadcast_compressor", self.broadcast_compressor,
+               COMPRESSORS)
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac {self.topk_frac} not in (0, 1]")
 
         _check("algorithm", self.algorithm, ALGORITHMS)
         _check("cohort_sampler", self.cohort_sampler, SAMPLERS)

@@ -1,0 +1,327 @@
+"""Wire compression as a first-class round stage (DESIGN.md §14).
+
+Production cross-device FL is bandwidth-bound on the client uplink, and
+FedaGrac transmits TWO quantities per report — the parameter delta and
+the ν orientation — so wire bytes, not FLOPs, are the scaling ceiling.
+This module turns the old int8-ν ablation into an engine stage:
+
+* ``COMPRESSORS`` — ``none`` / ``int8`` / ``int4`` / ``topk`` /
+  ``topk+int8``, each a padding-masked fake-quant codec on the flat
+  ``(rows, P)`` layout (the simulator runs compress→decompress in one
+  program; the *wire* is modeled by ``payload_bytes``).  Tree-layout
+  rounds ravel the transmitted quantity through the view table, compress,
+  and unravel — both layouts share one codec and one error state.
+* **Error feedback** (Karimireddy et al., SignSGD-EF; Stich et al.):
+  ê = C(v + e),  e ← (v + e) − ê.  Per-CLIENT accumulators live as
+  ``(M, P)`` rows in the round state (``ef_up`` for deltas, ``ef_nu``
+  for ν transmits) so partial participation and buffered-async staleness
+  compose correctly: a client's residual waits, untouched, until ITS next
+  report — never renormalized, never leaked to other clients.  The
+  server→client broadcast keeps single-vector accumulators (``ef_down``,
+  ``ef_down_nu``): a broadcast is one compression event received by all.
+* ``wire_cost`` / ``payload_bytes`` — the measured-bytes model behind
+  ``History.bytes_up``/``bytes_down`` and
+  ``roofline.analysis.bytes_on_the_wire``.
+
+Every codec is **padding-preserving by construction**: inputs are masked
+to the true n columns before any scale/threshold reduction (a poisoned
+lane-padding tail can neither inflate a scale nor survive to the output)
+— the invariant tests/test_compression.py pins for all compressors.
+
+Builders take ``compression=None`` (or an all-"none" config) to mean NO
+compression: they then bake the literally unchanged round code, keeping
+the golden bit-identity of every existing path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ops as qops
+
+PyTree = Any
+
+# int8: n code bytes + one 4-byte per-row scale.  int4: two codes per
+# byte.  topk: k × (4-byte index + 4-byte value).  topk+int8: k × (4-byte
+# index + 1-byte code) + scale.  fp32 ("none"): 4 bytes per element.
+_QMAX = {"int8": 127, "int4": 7}
+
+
+def payload_bytes(name: str, n: int, *, topk_frac: float = 0.05) -> float:
+    """Wire bytes for ONE compressed length-n vector (scales included)."""
+    if name == "none":
+        return 4.0 * n
+    if name == "int8":
+        return float(n) + 4.0
+    if name == "int4":
+        return math.ceil(n / 2) + 4.0
+    k = max(1, round(topk_frac * n))
+    if name == "topk":
+        return 8.0 * k
+    if name == "topk+int8":
+        return 5.0 * k + 4.0
+    raise KeyError(f"unknown compressor {name!r}; valid options: "
+                   f"{sorted(COMPRESSORS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Build-time description of the round's compression stage."""
+    uplink: str = "none"            # client → server deltas AND ν updates
+    downlink: str = "none"          # server → client (params, ν) broadcast
+    error_feedback: bool = True
+    topk_frac: float = 0.05
+
+    @classmethod
+    def from_fed(cls, fed) -> Optional["CompressionConfig"]:
+        """None when the config requests no compression at all — builders
+        then take the golden-pinned unchanged code path."""
+        if fed.compressor == "none" and fed.broadcast_compressor == "none":
+            return None
+        return cls(uplink=fed.compressor,
+                   downlink=fed.broadcast_compressor,
+                   error_feedback=fed.error_feedback,
+                   topk_frac=fed.topk_frac)
+
+    @property
+    def up_active(self) -> bool:
+        return self.uplink != "none"
+
+    @property
+    def down_active(self) -> bool:
+        return self.downlink != "none"
+
+    @property
+    def active(self) -> bool:
+        return self.up_active or self.down_active
+
+
+# ---------------------------------------------------------------------------
+# codecs: fake-quant round-trips on (rows, P)
+# ---------------------------------------------------------------------------
+
+def _mask_true(x: jax.Array, n: int) -> jax.Array:
+    """Zero the lane-padding tail [n, P) — the codec's defensive input
+    mask; scale/threshold reductions additionally mask inside qops."""
+    return jnp.where(jnp.arange(x.shape[-1]) < n, x, 0)
+
+
+def _make_int_codec(n: int, qmax: int, use_pallas, interpret) -> Callable:
+    def codec(mat: jax.Array) -> jax.Array:
+        xm = _mask_true(mat.astype(jnp.float32), n)
+        scale = qops.row_scales(xm, n, qmax)
+        q = qops.quantize_2d(xm, scale, qmax=qmax, use_pallas=use_pallas,
+                             interpret=interpret)
+        return qops.dequantize_2d(q, scale, out_dtype=mat.dtype,
+                                  use_pallas=use_pallas,
+                                  interpret=interpret)
+    return codec
+
+
+def _make_topk_codec(n: int, k: int, use_pallas, interpret) -> Callable:
+    def codec(mat: jax.Array) -> jax.Array:
+        xm = _mask_true(mat.astype(jnp.float32), n)
+        thresh = qops.topk_thresholds(xm, n, k)
+        return qops.topk_mask_2d(xm, thresh, use_pallas=use_pallas,
+                                 interpret=interpret).astype(mat.dtype)
+    return codec
+
+
+def _make_topk_int8_codec(n: int, k: int, use_pallas, interpret) -> Callable:
+    topk = _make_topk_codec(n, k, use_pallas, interpret)
+    quant = _make_int_codec(n, _QMAX["int8"], use_pallas, interpret)
+
+    def codec(mat: jax.Array) -> jax.Array:
+        # sparsify first, then quantize the survivors: the int8 scale is
+        # the max SURVIVING magnitude — zeroed entries quantize to 0
+        return quant(topk(mat))
+    return codec
+
+
+def _codec_none(n, topk_frac, use_pallas, interpret):
+    return lambda mat: mat
+
+
+def _codec_int8(n, topk_frac, use_pallas, interpret):
+    return _make_int_codec(n, _QMAX["int8"], use_pallas, interpret)
+
+
+def _codec_int4(n, topk_frac, use_pallas, interpret):
+    return _make_int_codec(n, _QMAX["int4"], use_pallas, interpret)
+
+
+def _topk_k(n: int, topk_frac: float) -> int:
+    return max(1, min(n, round(topk_frac * n)))
+
+
+def _codec_topk(n, topk_frac, use_pallas, interpret):
+    return _make_topk_codec(n, _topk_k(n, topk_frac), use_pallas, interpret)
+
+
+def _codec_topk_int8(n, topk_frac, use_pallas, interpret):
+    return _make_topk_int8_codec(n, _topk_k(n, topk_frac), use_pallas,
+                                 interpret)
+
+
+# name → factory(n, topk_frac, use_pallas, interpret) → codec(mat) -> mat
+COMPRESSORS: dict[str, Callable] = {
+    "none": _codec_none,
+    "int8": _codec_int8,
+    "int4": _codec_int4,
+    "topk": _codec_topk,
+    "topk+int8": _codec_topk_int8,
+}
+
+
+def make_codec(name: str, n: int, *, topk_frac: float = 0.05,
+               use_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None) -> Callable:
+    """Fake-quant codec ``(rows, P) -> (rows, P)`` for compressor ``name``
+    over vectors of n true elements (P − n padding columns are masked out
+    of every reduction and zero on output)."""
+    if name not in COMPRESSORS:
+        raise KeyError(f"unknown compressor {name!r}; valid options: "
+                       f"{sorted(COMPRESSORS)}")
+    return COMPRESSORS[name](n, topk_frac, use_pallas, interpret)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback stage closures (what the round builders bake in)
+# ---------------------------------------------------------------------------
+
+def make_rows_stage(codec: Callable, error_feedback: bool,
+                    key: str) -> Callable:
+    """Uplink stage over per-client rows.  ``apply(rows, state, new_state,
+    ids=None)``: compresses ``rows`` (shape (B, P)) with each reporting
+    client's own accumulator — gathered at ``ids`` under partial
+    participation / buffered-async, the full (M, P) block when ids is
+    None — and scatters the new residuals back to THOSE rows only:
+    a non-participant's accumulator is untouched by construction."""
+    def apply(rows, state, new_state, ids=None):
+        if error_feedback:
+            ef = state[key]
+            tgt = rows + (ef if ids is None else ef[ids])
+            out = codec(tgt)
+            resid = (tgt - out).astype(ef.dtype)
+            new_state[key] = (resid if ids is None
+                              else ef.at[ids].set(resid))
+            return out
+        return codec(rows)
+    return apply
+
+
+def make_vector_stage(codec: Callable, error_feedback: bool,
+                      key: str) -> Callable:
+    """Downlink (broadcast) stage over one (P,) server vector with a
+    single server-side accumulator — a broadcast is ONE compression event
+    received by every client."""
+    def apply(vec, state, new_state):
+        if error_feedback:
+            tgt = vec + state[key]
+            out = codec(tgt[None])[0]
+            new_state[key] = (tgt - out).astype(state[key].dtype)
+            return out
+        return codec(vec[None])[0]
+    return apply
+
+
+def init_compression_state(state: dict, compression: CompressionConfig,
+                           n_clients: int, p: int, dtype,
+                           uses_nu: bool) -> None:
+    """Allocate the error-feedback accumulators into the round state:
+    (M, P) rows per uplink quantity, (P,) per broadcast quantity.  Keys
+    exist iff error feedback is on for an active direction — the builders
+    gate on the same predicate, and checkpoint/serialize round-trips them
+    like any other state leaf."""
+    if not compression.error_feedback:
+        return
+    if compression.up_active:
+        state["ef_up"] = jnp.zeros((n_clients, p), dtype)
+        if uses_nu:
+            state["ef_nu"] = jnp.zeros((n_clients, p), dtype)
+    if compression.down_active:
+        state["ef_down"] = jnp.zeros((p,), dtype)
+        if uses_nu:
+            state["ef_down_nu"] = jnp.zeros((p,), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCompression:
+    """What a round builder bakes in: one stage closure per transmitted
+    quantity (None = that direction uncompressed).  ``up``/``up_nu`` are
+    row stages over per-client payloads with separate accumulators (the
+    delta and the ν transmit are different wire quantities with different
+    error dynamics); ``down``/``down_nu`` are broadcast vector stages."""
+    config: CompressionConfig
+    up: Optional[Callable]
+    up_nu: Optional[Callable]
+    down: Optional[Callable]
+    down_nu: Optional[Callable]
+
+
+def build_stages(compression: Optional[CompressionConfig], spec,
+                 uses_nu: bool, *,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None
+                 ) -> Optional[RoundCompression]:
+    """Resolve a ``CompressionConfig`` against a ``FlatSpec`` into baked
+    stage closures, or None when compression is off (builders then emit
+    the literally unchanged round — the golden bit-identity path)."""
+    if compression is None or not compression.active:
+        return None
+    if spec is None:
+        raise ValueError("compression requires a FlatSpec — the engines "
+                         "build one on both param layouts")
+    ef = compression.error_feedback
+    up = up_nu = down = down_nu = None
+    if compression.up_active:
+        codec = make_codec(compression.uplink, spec.n,
+                           topk_frac=compression.topk_frac,
+                           use_pallas=use_pallas, interpret=interpret)
+        up = make_rows_stage(codec, ef, "ef_up")
+        if uses_nu:
+            up_nu = make_rows_stage(codec, ef, "ef_nu")
+    if compression.down_active:
+        codec = make_codec(compression.downlink, spec.n,
+                           topk_frac=compression.topk_frac,
+                           use_pallas=use_pallas, interpret=interpret)
+        down = make_vector_stage(codec, ef, "ef_down")
+        if uses_nu:
+            down_nu = make_vector_stage(codec, ef, "ef_down_nu")
+    return RoundCompression(compression, up, up_nu, down, down_nu)
+
+
+EF_KEYS = ("ef_up", "ef_nu", "ef_down", "ef_down_nu")
+# async-engine broadcast carry (fed/async_engine.py): the last compressed
+# server broadcast, persisted in state so chunk boundaries and resumes see
+# the same anchors the clients were dispatched with
+BC_KEYS = ("bc_params", "bc_nu")
+FLAT_STATE_KEYS = EF_KEYS + BC_KEYS
+
+
+# ---------------------------------------------------------------------------
+# bytes-on-the-wire accounting
+# ---------------------------------------------------------------------------
+
+def wire_cost(n: int, uses_nu: bool,
+              compression: Optional[CompressionConfig]) -> dict:
+    """Per-client wire bytes per round/update under the configured
+    compressors.  Uplink carries the parameter delta plus (ν algorithms)
+    the selected orientation transmit; downlink carries the model
+    broadcast plus (ν algorithms) the global ν.  fp32 baseline = 4n per
+    quantity.  Multiply by the per-round participant count (M, C, or the
+    buffer B) for round totals — which is what the engines record into
+    ``History.bytes_up`` / ``bytes_down``."""
+    up_name = compression.uplink if compression is not None else "none"
+    down_name = compression.downlink if compression is not None else "none"
+    frac = compression.topk_frac if compression is not None else 0.05
+    q = 2 if uses_nu else 1
+    up = q * payload_bytes(up_name, n, topk_frac=frac)
+    down = q * payload_bytes(down_name, n, topk_frac=frac)
+    return {"uplink_per_client": up, "downlink_per_client": down,
+            "uplink_fp32_per_client": q * 4.0 * n,
+            "downlink_fp32_per_client": q * 4.0 * n}

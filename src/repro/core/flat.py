@@ -57,13 +57,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stages
+from repro.core import compress, stages
 from repro.core.fedopt import Algorithm
 from repro.core.tree_util import tree_wsum
 from repro.kernels.calibrated_update import ref as cu_ref
 from repro.kernels.calibrated_update.kernel import (LANES,
                                                     calibrated_update_2d,
                                                     calibrated_update_prox_2d)
+from repro.kernels.quantize import ops as qops
 
 PyTree = Any
 
@@ -265,15 +266,16 @@ def quantize_int8_flat(spec: FlatSpec, mat: jax.Array) -> jax.Array:
     exact tree semantics (amax is order-exact; the round/scale arithmetic
     runs in f32 and re-rounds through the leaf dtype) without the
     unravel→quantize→ravel tree round-trip the flat transmit used to pay.
-    The pad tail is untouched (zeros)."""
+    The pad tail is untouched (zeros), and each segment's amax runs through
+    the shared masked reduction (``qops.row_scales``) so no scale can ever
+    see a column outside its leaf's true extent."""
     m = mat.shape[0]
     out = jnp.zeros((m, spec.p), spec.dtype)
     for off, size, dtype in zip(spec.offsets, spec.sizes, spec.dtypes):
         seg = jax.lax.dynamic_slice_in_dim(mat, off, size, axis=-1)
         a = seg.astype(dtype)                       # the tree path's leaf
         af = a.astype(jnp.float32)
-        scale = jnp.maximum(
-            jnp.max(jnp.abs(af), axis=-1, keepdims=True) / 127.0, 1e-12)
+        scale = qops.row_scales(af, size, 127)
         q = (jnp.round(af / scale) * scale).astype(dtype)
         out = jax.lax.dynamic_update_slice(
             out, q.astype(spec.dtype), (0, off))
@@ -282,10 +284,13 @@ def quantize_int8_flat(spec: FlatSpec, mat: jax.Array) -> jax.Array:
 
 def flatten_state(spec: FlatSpec, state: dict) -> dict:
     """Tree round state → flat round state (same keys; params/ν/server
-    moments become (P,) buffers, ν⁽ⁱ⁾ an (M, P) matrix)."""
+    moments become (P,) buffers, ν⁽ⁱ⁾ an (M, P) matrix).  Compression
+    residuals / broadcast carries (``compress.FLAT_STATE_KEYS``) are
+    flat-NATIVE on both layouts — the tree round compresses through the
+    view table — so they pass through unchanged."""
     out = {}
     for k, v in state.items():
-        if k == "round":
+        if k == "round" or k in compress.FLAT_STATE_KEYS:
             out[k] = v
         elif k == "nu_i":
             out[k] = ravel(spec, v, client_dims=1)
@@ -297,7 +302,7 @@ def flatten_state(spec: FlatSpec, state: dict) -> dict:
 def unflatten_state(spec: FlatSpec, state: dict) -> dict:
     out = {}
     for k, v in state.items():
-        if k == "round":
+        if k == "round" or k in compress.FLAT_STATE_KEYS:
             out[k] = v
         elif k == "nu_i":
             out[k] = unravel(spec, v, client_dims=1)
@@ -483,17 +488,25 @@ def make_flat_round(spec: FlatSpec,
                     algo: Algorithm, *, lr: float, k_max: int,
                     track_nu: str = "delta",
                     quantize_transmit: bool = False,
+                    compression=None,
                     use_pallas: Optional[bool] = None,
                     param_constraint: Optional[Callable[[jax.Array, int],
                                                         jax.Array]] = None):
     """Flat twin of ``stages.make_layered_round``: same signature
     ``round_fn(state, batches, k_steps, weights, lam=None)``, state leaves
     flat (``flatten_state``).  Aggregation / orientation / server-opt call
-    the SAME registry functions as the tree round — on one (M, P) leaf."""
+    the SAME registry functions as the tree round — on one (M, P) leaf.
+    The compression stage (core/compress.py) is flat-NATIVE here: every
+    transmitted quantity already lives on (rows, P), so the codecs apply
+    with no ravel bridge."""
     client_update = make_flat_client_update(
         spec, loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         use_pallas=use_pallas)
     aggregate = stages.AGGREGATORS[algo.aggregator]
+    cs = compress.build_stages(compression, spec, algo.uses_nu,
+                               use_pallas=use_pallas)
+    down_on = cs is not None and cs.down is not None
+    up_on = cs is not None and cs.up is not None
 
     def constrain(arr, client_dims):
         if param_constraint is None:
@@ -506,18 +519,38 @@ def make_flat_round(spec: FlatSpec,
             lam = algo.lam
         params0 = state["params"]                          # (P,)
         kbar = jnp.dot(weights, k_steps.astype(jnp.float32))
+        new_state = dict(state)
 
-        c_all = (state["nu"][None] - state["nu_i"]
+        if down_on:
+            anchor = cs.down(params0, state, new_state)
+            nu_bc = (cs.down_nu(state["nu"], state, new_state)
+                     if algo.uses_nu else None)
+        else:
+            anchor = params0
+            nu_bc = state["nu"] if algo.uses_nu else None
+
+        c_all = (nu_bc[None] - state["nu_i"]
                  if algo.uses_nu else None)                # (M, P)
 
-        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+        x_i, g0_i, acc_i, loss0 = client_update(anchor, c_all, batches,
                                                 k_steps, lam)
         x_i = constrain(x_i, 1)
         kf = k_steps.astype(jnp.float32)
 
-        new_params = aggregate(params0, x_i, kf, weights, kbar)
-        new_state = dict(state)
-        new_params = stages.server_update(algo, state, params0, new_params,
+        if up_on:
+            d_hat = cs.up(x_i - anchor[None], state, new_state)
+            x_srv = anchor[None] + d_hat
+        else:
+            x_srv = x_i
+
+        agg = aggregate(anchor, x_srv, kf, weights, kbar)
+        if down_on:
+            # clients averaged around the broadcast x̂; re-base the result
+            # onto the TRUE master so downlink error never accumulates
+            # into the server trajectory: x⁺ = x + (agg − x̂)
+            agg = (params0.astype(jnp.float32) + agg.astype(jnp.float32)
+                   - anchor.astype(jnp.float32)).astype(spec.dtype)
+        new_params = stages.server_update(algo, state, params0, agg,
                                           new_state)
         new_params = constrain(new_params, 0)
         new_state["params"] = new_params
@@ -525,9 +558,11 @@ def make_flat_round(spec: FlatSpec,
 
         if algo.uses_nu:
             transmit, avg_g = _flat_transmit(
-                spec, algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
+                spec, algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
                 lam, track_nu=track_nu,
                 quantize_transmit=quantize_transmit)
+            if up_on:
+                transmit = cs.up_nu(transmit, state, new_state)
             new_state["nu"] = constrain(tree_wsum(weights, transmit), 0)
             new_state["nu_i"] = constrain(avg_g, 1)
 
@@ -547,15 +582,22 @@ def make_flat_cohort_round(spec: FlatSpec,
                            nu_decay: float = 0.0,
                            track_nu: str = "delta",
                            quantize_transmit: bool = False,
+                           compression=None,
                            use_pallas: Optional[bool] = None,
                            param_constraint: Optional[Callable] = None):
     """Flat twin of ``stages.make_cohort_round``: the cohort's ν⁽ⁱ⁾ gather
     and the post-round scatter are pure ROW indexing on the (M_pop, P)
-    matrix — no per-leaf gather chains (DESIGN.md §10, §11)."""
+    matrix — no per-leaf gather chains (DESIGN.md §10, §11).  Uplink
+    error-feedback rows gather/scatter at the cohort ids, so absentees'
+    residuals wait untouched for their next report."""
     client_update = make_flat_client_update(
         spec, loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         use_pallas=use_pallas)
     aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
+    cs = compress.build_stages(compression, spec, algo.uses_nu,
+                               use_pallas=use_pallas)
+    down_on = cs is not None and cs.down is not None
+    up_on = cs is not None and cs.up is not None
 
     def constrain(arr, client_dims):
         if param_constraint is None:
@@ -570,16 +612,32 @@ def make_flat_cohort_round(spec: FlatSpec,
         kf = k_steps.astype(jnp.float32)
         mass = jnp.sum(cweights)
         kbar = jnp.dot(cweights, kf) / mass
+        new_state = dict(state)
 
-        c_all = (state["nu"][None] - state["nu_i"][cohort]
+        if down_on:
+            anchor = cs.down(params0, state, new_state)
+            nu_bc = (cs.down_nu(state["nu"], state, new_state)
+                     if algo.uses_nu else None)
+        else:
+            anchor = params0
+            nu_bc = state["nu"] if algo.uses_nu else None
+
+        c_all = (nu_bc[None] - state["nu_i"][cohort]
                  if algo.uses_nu else None)                # (C, P) rows
 
-        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+        x_i, g0_i, acc_i, loss0 = client_update(anchor, c_all, batches,
                                                 k_steps, lam)
         x_i = constrain(x_i, 1)
 
-        agg = aggregate(params0, params0[None], x_i, kf, cweights, kbar)
-        new_state = dict(state)
+        if up_on:
+            d_hat = cs.up(x_i - anchor[None], state, new_state, ids=cohort)
+            x_srv = anchor[None] + d_hat
+        else:
+            x_srv = x_i
+
+        # buffered aggregator takes base and anchors separately: base is
+        # the TRUE master, deltas measured vs the broadcast — no re-base
+        agg = aggregate(params0, anchor[None], x_srv, kf, cweights, kbar)
         new_params = stages.server_update(algo, state, params0, agg,
                                           new_state)
         new_params = constrain(new_params, 0)
@@ -588,9 +646,11 @@ def make_flat_cohort_round(spec: FlatSpec,
 
         if algo.uses_nu:
             transmit, avg_g = _flat_transmit(
-                spec, algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
+                spec, algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
                 lam, track_nu=track_nu,
                 quantize_transmit=quantize_transmit)
+            if up_on:
+                transmit = cs.up_nu(transmit, state, new_state, ids=cohort)
             contrib = tree_wsum(cweights, transmit)
             new_nu = stages.nu_mass_mix(state["nu"], contrib, mass)
             new_state["nu"] = constrain(new_nu, 0)

@@ -33,6 +33,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress
 from repro.core.fedopt import Algorithm
 from repro.core.stages import make_layered_round, quantize_int8
 from repro.core.tree_util import tree_stack_zeros, tree_zeros
@@ -43,10 +44,17 @@ __all__ = ["init_state", "make_round", "quantize_int8", "tree_zeros",
 PyTree = Any
 
 
-def init_state(params: PyTree, n_clients: int, algo: Algorithm) -> dict:
+def init_state(params: PyTree, n_clients: int, algo: Algorithm,
+               compression=None, spec=None) -> dict:
     """Server + client state.  ν/ν⁽ⁱ⁾ start at zero: the first round then
     runs plain (uncalibrated) local SGD, matching the paper's init where
-    ν⁽ⁱ⁾ = ∇f_i(x₁) is unknown before any gradient is computed."""
+    ν⁽ⁱ⁾ = ∇f_i(x₁) is unknown before any gradient is computed.
+
+    With an active ``compression`` (core/compress.py, DESIGN.md §14) the
+    error-feedback accumulators are allocated as flat-layout leaves — an
+    (M, P) row block per uplink quantity, (P,) per broadcast — on BOTH
+    param layouts (the tree round compresses through the view table, so
+    its residuals are flat too); ``spec`` supplies (P, dtype)."""
     state = {"params": params, "round": jnp.zeros((), jnp.int32)}
     if algo.uses_nu:
         state["nu"] = tree_zeros(params)
@@ -56,6 +64,12 @@ def init_state(params: PyTree, n_clients: int, algo: Algorithm) -> dict:
     elif algo.server_opt == "adam":
         state["server_m"] = tree_zeros(params)
         state["server_v"] = tree_zeros(params)
+    if compression is not None and compression.active:
+        if spec is None:
+            raise ValueError("compression requires a FlatSpec (built on "
+                             "both layouts by the engines)")
+        compress.init_compression_state(state, compression, n_clients,
+                                        spec.p, spec.dtype, algo.uses_nu)
     return state
 
 
@@ -64,6 +78,7 @@ def make_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                track_nu: str = "delta",
                spmd_axis_name=None,
                quantize_transmit: bool = False,
+               compression=None, spec=None,
                param_constraint: Optional[Callable[[PyTree, int], PyTree]] = None):
     """Build ``round_fn(state, batches, k_steps, weights[, lam]) ->
     (state, metrics)`` by composing the stages for ``algo``.
@@ -73,8 +88,11 @@ def make_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     The optional trailing ``lam`` is a traced λ (defaults to ``algo.lam``) —
     λ-schedules reuse one compiled round.  ``param_constraint(tree,
     n_client_dims)`` optionally pins shardings at round boundaries.
+    ``compression`` (+ its ``spec``) inserts the wire-compression stage
+    (core/compress.py, DESIGN.md §14); None bakes the unchanged round.
     """
     return make_layered_round(
         loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         spmd_axis_name=spmd_axis_name, quantize_transmit=quantize_transmit,
+        compression=compression, spec=spec,
         param_constraint=param_constraint)

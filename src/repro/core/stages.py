@@ -32,10 +32,23 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress
 from repro.core.fedopt import Algorithm
 from repro.core.tree_util import expand, tree_wsum, tree_zeros
 
 PyTree = Any
+
+
+def _flat_bridge(spec):
+    """Tree-layout access to the flat view table (for the compression
+    stage, DESIGN.md §14): ravel/unravel closures over ``spec``.  Imported
+    at build time — core.flat imports this module, so the dependency must
+    stay function-level."""
+    from repro.core import flat as _flat
+    return (lambda t: _flat.ravel(spec, t),
+            lambda t: _flat.ravel(spec, t, client_dims=1),
+            lambda a: _flat.unravel(spec, a),
+            lambda a: _flat.unravel(spec, a, client_dims=1))
 
 
 def _typed_scale(lam, c: jax.Array) -> jax.Array:
@@ -413,6 +426,7 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                        track_nu: str = "delta",
                        spmd_axis_name=None,
                        quantize_transmit: bool = False,
+                       compression=None, spec=None,
                        param_constraint: Optional[Callable[[PyTree, int],
                                                            PyTree]] = None):
     """Compose the four stages into the synchronous round function.
@@ -421,11 +435,24 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     (state, metrics)``.  ``lam`` may be a traced scalar (λ-schedules reuse
     one compiled round — see fed/simulation.py); ``None`` bakes ``algo.lam``
     in as a compile-time constant.
+
+    ``compression`` (core/compress.py, DESIGN.md §14) inserts the wire
+    stage at trace time: the server→client broadcast is compressed before
+    dispatch (clients anchor on — and the server aggregates against —
+    what they actually received), the client→server delta and ν transmit
+    are compressed with per-client error feedback, all through the flat
+    view table of ``spec``.  None (or an all-"none" config) bakes the
+    literally unchanged round — the golden bit-identity contract.
     """
     client_update = make_client_update(
         loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         spmd_axis_name=spmd_axis_name)
     aggregate = AGGREGATORS[algo.aggregator]
+    cs = compress.build_stages(compression, spec, algo.uses_nu)
+    if cs is not None:
+        _rv, _rvr, _ur, _urr = _flat_bridge(spec)
+    down_on = cs is not None and cs.down is not None
+    up_on = cs is not None and cs.up is not None
 
     def constrain(tree, client_dims):
         if param_constraint is None:
@@ -439,30 +466,61 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         params0 = state["params"]
         m = k_steps.shape[0]
         kbar = jnp.dot(weights, k_steps.astype(jnp.float32))
+        new_state = dict(state)
+
+        # -- downlink: clients start from the compressed broadcast --------
+        if down_on:
+            bc_flat = cs.down(_rv(params0), state, new_state)
+            anchor = _ur(bc_flat)
+            nu_bc = (_ur(cs.down_nu(_rv(state["nu"]), state, new_state))
+                     if algo.uses_nu else None)
+        else:
+            anchor = params0
+            nu_bc = state["nu"] if algo.uses_nu else None
 
         if algo.uses_nu:
             c_all = jax.tree.map(lambda nu, nui: (nu[None] - nui) if nui.ndim
-                                 else nu - nui, state["nu"], state["nu_i"])
+                                 else nu - nui, nu_bc, state["nu_i"])
         else:
             c_all = zero_corrections(params0, m)
 
-        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+        x_i, g0_i, acc_i, loss0 = client_update(anchor, c_all, batches,
                                                 k_steps, lam)
         x_i = constrain(x_i, 1)
         kf = k_steps.astype(jnp.float32)
 
-        new_params = aggregate(params0, x_i, kf, weights, kbar)
-        new_state = dict(state)
-        new_params = server_update(algo, state, params0, new_params,
-                                   new_state)
+        # -- uplink: the server sees x̂ᵢ = anchor + C(Δᵢ + eᵢ) -------------
+        if up_on:
+            a_flat = bc_flat if down_on else _rv(params0)
+            d_hat = cs.up(_rvr(x_i) - a_flat[None], state, new_state)
+            x_srv = _urr(a_flat[None] + d_hat)
+        else:
+            x_srv = x_i
+
+        agg = aggregate(anchor, x_srv, kf, weights, kbar)
+        if down_on:
+            # re-base onto the true master: the round pseudo-gradient is
+            # measured against the broadcast the clients actually anchored
+            # on, then applied to the uncompressed server model
+            agg = jax.tree.map(
+                lambda p0, a, an: (p0.astype(jnp.float32)
+                                   + a.astype(jnp.float32)
+                                   - an.astype(jnp.float32)
+                                   ).astype(p0.dtype), params0, agg, anchor)
+        new_params = server_update(algo, state, params0, agg, new_state)
         new_params = constrain(new_params, 0)
         new_state["params"] = new_params
         new_state["round"] = state["round"] + 1
 
         if algo.uses_nu:
+            # avg_g (the client-local reference ν⁽ⁱ⁾) uses the TRUE local
+            # iterate — it never crosses the wire; the transmit does, so
+            # it alone is compressed (with its own error accumulator)
             transmit, avg_g = orientation_transmit(
-                algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
+                algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
                 track_nu=track_nu, quantize_transmit=quantize_transmit)
+            if up_on:
+                transmit = _urr(cs.up_nu(_rvr(transmit), state, new_state))
             new_state["nu"] = constrain(tree_wsum(weights, transmit), 0)
             # Line 11: the *local* reference ν⁽ⁱ⁾ is always the averaged grad
             new_state["nu_i"] = constrain(avg_g, 1)
@@ -483,6 +541,7 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                       track_nu: str = "delta",
                       spmd_axis_name=None,
                       quantize_transmit: bool = False,
+                      compression=None, spec=None,
                       param_constraint: Optional[Callable[[PyTree, int],
                                                           PyTree]] = None):
     """The synchronous round over a sampled cohort of C ≤ M clients.
@@ -507,6 +566,11 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         spmd_axis_name=spmd_axis_name)
     aggregate = BUFFERED_AGGREGATORS[algo.aggregator]
+    cs = compress.build_stages(compression, spec, algo.uses_nu)
+    if cs is not None:
+        _rv, _rvr, _ur, _urr = _flat_bridge(spec)
+    down_on = cs is not None and cs.down is not None
+    up_on = cs is not None and cs.up is not None
 
     def constrain(tree, client_dims):
         if param_constraint is None:
@@ -522,25 +586,45 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         kf = k_steps.astype(jnp.float32)
         mass = jnp.sum(cweights)
         kbar = jnp.dot(cweights, kf) / mass          # cohort-weighted K̄
+        new_state = dict(state)
+
+        if down_on:
+            bc_flat = cs.down(_rv(params0), state, new_state)
+            anchor = _ur(bc_flat)
+            nu_bc = (_ur(cs.down_nu(_rv(state["nu"]), state, new_state))
+                     if algo.uses_nu else None)
+        else:
+            anchor = params0
+            nu_bc = state["nu"] if algo.uses_nu else None
 
         if algo.uses_nu:
             # gather only the cohort's correction rows: compute is O(C)
             c_all = jax.tree.map(
                 lambda nu, nui: (nu[None] - nui[cohort]) if nui.ndim
-                else nu - nui, state["nu"], state["nu_i"])
+                else nu - nui, nu_bc, state["nu_i"])
         else:
             c_all = zero_corrections(params0, c)
 
-        x_i, g0_i, acc_i, loss0 = client_update(params0, c_all, batches,
+        x_i, g0_i, acc_i, loss0 = client_update(anchor, c_all, batches,
                                                 k_steps, lam)
         x_i = constrain(x_i, 1)
 
-        # pseudo-delta aggregation (unbiased under Σ w̃ ≠ 1): the buffered
-        # aggregators with the shared x̃ broadcast as every client's anchor
-        anchor1 = jax.tree.map(lambda p: p[None], params0)
-        agg = aggregate(params0, anchor1, x_i, kf, cweights, kbar)
+        # uplink compression: error-feedback rows gathered/scattered at
+        # the cohort ids only — absentees' accumulators stay untouched
+        if up_on:
+            a_flat = bc_flat if down_on else _rv(params0)
+            d_hat = cs.up(_rvr(x_i) - a_flat[None], state, new_state,
+                          ids=cohort)
+            x_srv = _urr(a_flat[None] + d_hat)
+        else:
+            x_srv = x_i
 
-        new_state = dict(state)
+        # pseudo-delta aggregation (unbiased under Σ w̃ ≠ 1): the buffered
+        # aggregators with the shared broadcast as every client's anchor —
+        # base = the TRUE master, deltas measured vs what clients received
+        anchor1 = jax.tree.map(lambda p: p[None], anchor)
+        agg = aggregate(params0, anchor1, x_srv, kf, cweights, kbar)
+
         new_params = server_update(algo, state, params0, agg, new_state)
         new_params = constrain(new_params, 0)
         new_state["params"] = new_params
@@ -548,8 +632,11 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
 
         if algo.uses_nu:
             transmit, avg_g = orientation_transmit(
-                algo, params0, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
+                algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
                 track_nu=track_nu, quantize_transmit=quantize_transmit)
+            if up_on:
+                transmit = _urr(cs.up_nu(_rvr(transmit), state, new_state,
+                                         ids=cohort))
             contrib = tree_wsum(cweights, transmit)
             new_nu = nu_mass_mix(state["nu"], contrib, mass)
             new_state["nu"] = constrain(new_nu, 0)

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import flat, rounds, stages
+from repro.core import compress, flat, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.core.tree_util import tree_wsum
 from repro.data.partition import gaussian_k_schedule
@@ -176,12 +176,30 @@ class BufferedAsyncSimulation:
             raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
                              f"choose 'tree' or 'flat'")
         self.layout = fed.param_layout
-        self._spec = (flat.make_flat_spec(
-            params, master_dtype=fed.master_dtype or None)
-            if self.layout == "flat" else None)
+        # wire compression (core/compress.py, DESIGN.md §14): uplink EF
+        # rows follow the REPORTING ids; the downlink broadcast is carried
+        # in state ("bc_params"/"bc_nu") so chunk boundaries and resumes
+        # see the same anchors the clients were dispatched with
+        self.compression = compress.CompressionConfig.from_fed(fed)
+        self._down_on = (self.compression is not None
+                         and self.compression.down_active)
+        if self.layout == "flat":
+            self._spec = flat.make_flat_spec(
+                params, master_dtype=fed.master_dtype or None)
+        elif self.compression is not None:
+            self._spec = flat.make_flat_spec(params)
+        else:
+            self._spec = None
+        self._n_true = (self._spec.n if self._spec is not None else
+                        int(sum(int(np.prod(lv.shape, dtype=np.int64))
+                                for lv in jax.tree.leaves(params))))
+        self._wire = compress.wire_cost(self._n_true, self.algo.uses_nu,
+                                        self.compression)
         if self.layout == "flat":
             params = flat.ravel(self._spec, params)
-        self.state = rounds.init_state(params, m, self.algo)
+        self.state = rounds.init_state(params, m, self.algo,
+                                       compression=self.compression,
+                                       spec=self._spec)
         self.version = 0
         self._device_sampler = callable(getattr(batcher, "sample_row", None))
         self._loss_fn = loss_fn
@@ -200,16 +218,54 @@ class BufferedAsyncSimulation:
 
     # -- device-resident anchor buffer --------------------------------------
 
+    def _bridge(self):
+        """(ravel, ravel_rows, unravel, unravel_rows) — identities on the
+        flat layout, view-table crossings on the tree layout."""
+        if self.layout == "flat":
+            ident = lambda a: a
+            return ident, ident, ident, ident
+        spec = self._spec
+        return (lambda t: flat.ravel(spec, t),
+                lambda t: flat.ravel(spec, t, client_dims=1),
+                lambda a: flat.unravel(spec, a),
+                lambda a: flat.unravel(spec, a, client_dims=1))
+
+    def _broadcast_init(self) -> None:
+        """The t = 0 dispatch ships a genuine compressed broadcast: one
+        codec event through ``ef_down``(/``ef_down_nu``), persisted as the
+        ``bc_params``/``bc_nu`` state carry the chunk body reads."""
+        cs = compress.build_stages(self.compression, self._spec,
+                                   self.algo.uses_nu)
+        _rv = self._bridge()[0]
+        uses_nu = self.algo.uses_nu
+
+        def bcast(state):
+            new_state = dict(state)
+            new_state["bc_params"] = cs.down(_rv(state["params"]), state,
+                                             new_state)
+            if uses_nu:
+                new_state["bc_nu"] = cs.down_nu(_rv(state["nu"]), state,
+                                                new_state)
+            return new_state
+
+        self.state = jax.jit(bcast)(self.state)
+
     def _reset_anchors(self) -> None:
         """(M+1)-row anchor buffer: rows 0…M-1 hold each client's
-        dispatch-time (params, ν); row M is the duplicate-write scratch."""
+        dispatch-time (params, ν); row M is the duplicate-write scratch.
+        Under downlink compression the dispatch-time model is the
+        COMPRESSED broadcast, not the raw master."""
         rows = self.clock.m + 1
+        _ur = self._bridge()[2]
+        p0 = (_ur(self.state["bc_params"]) if self._down_on
+              else self.state["params"])
+        nu0 = ((_ur(self.state["bc_nu"]) if self._down_on
+                else self.state["nu"]) if self.algo.uses_nu else None)
         self._anchors = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (rows,) + p.shape),
-            self.state["params"])
+            lambda p: jnp.broadcast_to(p[None], (rows,) + p.shape), p0)
         self._nu_anchors = (jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (rows,) + p.shape),
-            self.state["nu"]) if self.algo.uses_nu else jnp.zeros(()))
+            nu0) if self.algo.uses_nu else jnp.zeros(()))
 
     # -- the jitted scanned chunk (one trace per chunk length) --------------
 
@@ -239,6 +295,11 @@ class BufferedAsyncSimulation:
                 self._loss_fn, algo, lr=lr, k_max=k_max,
                 per_client_anchor=True)
         aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
+        cs = compress.build_stages(self.compression, self._spec, uses_nu)
+        down_on = cs is not None and cs.down is not None
+        up_on = cs is not None and cs.up is not None
+        if cs is not None:
+            _rv, _rvr, _ur, _urr = self._bridge()
 
         def body(carry, xs):
             state, A, N = carry
@@ -246,6 +307,12 @@ class BufferedAsyncSimulation:
             cur, fresh, wids = xs["cur"], xs["fresh"], xs["write_ids"]
             lam = xs["lam"]
             params = state["params"]
+            new_state = dict(state)
+            # what a client dispatched on THIS version actually received:
+            # the compressed broadcast carried in state, or the raw model
+            cur_p = _ur(state["bc_params"]) if down_on else params
+            cur_nu = ((_ur(state["bc_nu"]) if down_on else state["nu"])
+                      if uses_nu else None)
 
             def gather(buf, current):
                 # dispatch-time anchors; reports dispatched within THIS
@@ -257,7 +324,7 @@ class BufferedAsyncSimulation:
                         b[ids]),
                     buf, current)
 
-            anchor_i = gather(A, params)
+            anchor_i = gather(A, cur_p)
             if device:
                 batches = jax.vmap(
                     lambda d, i: batcher.sample_row(d, i, k_max))(
@@ -279,7 +346,7 @@ class BufferedAsyncSimulation:
                 # (1 − (1−d)^τ) since dispatch — an accepted approximation
                 # (the drift shrinks the correction, never grows it) that
                 # avoids a second (M+1)-row snapshot buffer
-                nu_anchor = gather(N, state["nu"])
+                nu_anchor = gather(N, cur_nu)
                 c_b = jax.tree.map(lambda na, nui: na - nui[ids],
                                    nu_anchor, state["nu_i"])
             else:
@@ -288,8 +355,18 @@ class BufferedAsyncSimulation:
             x_b, g0_b, acc_b, loss0 = client_update(anchor_i, c_b, batches,
                                                     k_steps, lam)
 
-            agg = aggregate(params, anchor_i, x_b, kf, sw, kbar)
-            new_state = dict(state)
+            # uplink compression at the REPORTING ids: each reporter's
+            # error-feedback row rides its own reports (a duplicate
+            # same-buffer reporter resolves last-wins, the nu_i caveat)
+            if up_on:
+                a_rows = _rvr(anchor_i)
+                d_hat = cs.up(_rvr(x_b) - a_rows, state, new_state,
+                              ids=ids)
+                x_srv = _urr(a_rows + d_hat)
+            else:
+                x_srv = x_b
+
+            agg = aggregate(params, anchor_i, x_srv, kf, sw, kbar)
             new_params = stages.server_update(algo, state, params, agg,
                                               new_state)
             new_state["params"] = new_params
@@ -299,6 +376,9 @@ class BufferedAsyncSimulation:
                 transmit, avg_g = stages.orientation_transmit(
                     algo, params, x_b, g0_b, acc_b, c_b, kf, kbar, lr, lam,
                     anchor_i=anchor_i)
+                if up_on:
+                    transmit = _urr(cs.up_nu(_rvr(transmit), state,
+                                             new_state, ids=ids))
                 contrib = tree_wsum(sw, transmit)
                 new_state["nu"] = stages.nu_mass_mix(state["nu"], contrib,
                                                      mass)
@@ -307,6 +387,16 @@ class BufferedAsyncSimulation:
                 # reports — both are current to within one update
                 new_state["nu_i"] = stages.scatter_nu_rows(
                     state["nu_i"], new_state["nu"], avg_g, ids, nu_decay)
+
+            # this update's broadcast: ONE compression event through the
+            # server-side accumulator, persisted for the next gather and
+            # written into re-dispatched anchors below
+            if down_on:
+                new_bc = cs.down(_rv(new_params), state, new_state)
+                new_state["bc_params"] = new_bc
+                old_anchor, new_anchor = cur_p, _ur(new_bc)
+            else:
+                old_anchor, new_anchor = params, new_params
 
             def scatter(buf, old, new):
                 # re-dispatch anchors: the pre-update model, or the
@@ -323,9 +413,15 @@ class BufferedAsyncSimulation:
                                   ).astype(b.dtype)),
                     buf, old, new)
 
-            A = scatter(A, params, new_params)
+            A = scatter(A, old_anchor, new_anchor)
             if uses_nu:
-                N = scatter(N, state["nu"], new_state["nu"])
+                if down_on:
+                    new_bc_nu = cs.down_nu(_rv(new_state["nu"]), state,
+                                           new_state)
+                    new_state["bc_nu"] = new_bc_nu
+                    N = scatter(N, cur_nu, _ur(new_bc_nu))
+                else:
+                    N = scatter(N, state["nu"], new_state["nu"])
 
             metrics = {"loss": jnp.dot(sw, loss0) / mass, "kbar": kbar,
                        "mass": mass}
@@ -418,6 +514,8 @@ class BufferedAsyncSimulation:
         lam_all = np.asarray(
             [float(self.lam_schedule(u)) if self.lam_schedule
              else self.algo.lam for u in range(t_updates)], np.float32)
+        if self._down_on:
+            self._broadcast_init()
         self._reset_anchors()
         if not self._device_sampler:
             self._wave_cache = {}
@@ -465,6 +563,12 @@ class BufferedAsyncSimulation:
             hist.wall.extend([dt / r] * r)
             hist.sim_time.extend(tl.arrival_t[sl, -1].tolist())
             hist.staleness.extend(tau[sl].mean(axis=1).tolist())
+            # wire traffic per update: B reports up, B re-dispatch
+            # downloads of the (possibly compressed) new broadcast
+            hist.bytes_up.extend(
+                [self.buffer * self._wire["uplink_per_client"]] * r)
+            hist.bytes_down.extend(
+                [self.buffer * self._wire["downlink_per_client"]] * r)
             if self.scenario is not None:
                 hist.dropped.extend(
                     tl.aborted[sl].mean(axis=1).tolist())

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import engine, flat, rounds, stages
+from repro.core import compress, engine, flat, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
 from repro.fed.population import ClientPopulation
@@ -52,6 +52,11 @@ class History:
     # mid-round dropouts (k′ < K_i) — population-level for the sync engine,
     # buffer-level for the async engine; empty without a scenario
     dropped: list[float] = dataclasses.field(default_factory=list)
+    # wire bytes per round/update under the configured compressors
+    # (core/compress.py wire_cost × participants) — recorded on EVERY run,
+    # fp32 cost when compression is off, so baselines compare directly
+    bytes_up: list[float] = dataclasses.field(default_factory=list)
+    bytes_down: list[float] = dataclasses.field(default_factory=list)
 
     def fairness(self) -> Optional[dict]:
         """FL fairness of the final round: worst-client metric and the
@@ -68,6 +73,17 @@ class History:
             if (v >= target) if higher_is_better else (v <= target):
                 return t + 1
         return None
+
+    def bytes_to_target(self, target: float, higher_is_better=True
+                        ) -> Optional[float]:
+        """Cumulative uplink bytes spent when the eval metric first hits
+        ``target`` (the compression headline: bytes, not rounds, are the
+        cross-device cost model) — None if the target is never reached."""
+        r = self.rounds_to_target(target, higher_is_better)
+        if r is None or not self.bytes_up or not self.metric:
+            return None
+        per_eval = max(1, len(self.bytes_up) // len(self.metric))
+        return float(sum(self.bytes_up[:r * per_eval]))
 
 
 class FederatedSimulation:
@@ -111,12 +127,29 @@ class FederatedSimulation:
             raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
                              f"choose 'tree' or 'flat'")
         self.layout = fed.param_layout
-        self._spec = (flat.make_flat_spec(
-            params, master_dtype=fed.master_dtype or None)
-            if self.layout == "flat" else None)
+        # wire compression (core/compress.py, DESIGN.md §14): None when the
+        # config requests no compression — every builder below then bakes
+        # its literally unchanged (golden-pinned) round
+        self.compression = compress.CompressionConfig.from_fed(fed)
+        if self.layout == "flat":
+            self._spec = flat.make_flat_spec(
+                params, master_dtype=fed.master_dtype or None)
+        elif self.compression is not None:
+            # the tree round compresses through the view table: it needs
+            # the spec (and flat EF state) even though params stay a pytree
+            self._spec = flat.make_flat_spec(params)
+        else:
+            self._spec = None
+        self._n_true = (self._spec.n if self._spec is not None else
+                        int(sum(int(np.prod(lv.shape, dtype=np.int64))
+                                for lv in jax.tree.leaves(params))))
+        self._wire = compress.wire_cost(self._n_true, self.algo.uses_nu,
+                                        self.compression)
         if self.layout == "flat":
             params = flat.ravel(self._spec, params)
-        self.state = rounds.init_state(params, fed.n_clients, self.algo)
+        self.state = rounds.init_state(params, fed.n_clients, self.algo,
+                                       compression=self.compression,
+                                       spec=self._spec)
         self._round: Optional[Callable] = None
         self._chunks: dict[int, Callable] = {}
         self._loss_fn = loss_fn
@@ -161,9 +194,11 @@ class FederatedSimulation:
         if self.layout == "flat":
             return flat.make_flat_round(
                 self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
-                k_max=self.k_max)
+                k_max=self.k_max, compression=self.compression)
         return rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
-                                 k_max=self.k_max)
+                                 k_max=self.k_max,
+                                 compression=self.compression,
+                                 spec=self._spec)
 
     def _round_fn(self) -> Callable:
         """One jitted round for EVERY λ: the round function takes λ as a
@@ -190,10 +225,12 @@ class FederatedSimulation:
         if self.layout == "flat":
             return flat.make_flat_cohort_round(
                 self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
-                k_max=self.k_max, nu_decay=self.fed.cohort_nu_decay)
+                k_max=self.k_max, nu_decay=self.fed.cohort_nu_decay,
+                compression=self.compression)
         return stages.make_cohort_round(
             self._loss_fn, self.algo, lr=self.fed.lr, k_max=self.k_max,
-            nu_decay=self.fed.cohort_nu_decay)
+            nu_decay=self.fed.cohort_nu_decay,
+            compression=self.compression, spec=self._spec)
 
     def _pop_round_fn(self) -> Callable:
         """One jitted cohort round (partial participation, DESIGN.md §10)."""
@@ -260,6 +297,15 @@ class FederatedSimulation:
             float(np.mean(self._k_row(t0 + j) < self._sched_row(t0 + j)))
             for j in range(r))
 
+    def _record_bytes(self, hist: History, r: int, participants: int
+                      ) -> None:
+        """Measured wire traffic for r rounds of ``participants`` reports
+        each (fp32 cost when compression is off — the baseline series)."""
+        hist.bytes_up.extend(
+            [participants * self._wire["uplink_per_client"]] * r)
+        hist.bytes_down.extend(
+            [participants * self._wire["downlink_per_client"]] * r)
+
     def _chunk_inputs(self, t0: int, r: int):
         """Stacked (k_steps, weights, lam) + batches for rounds t0…t0+r-1."""
         ks = jnp.asarray(np.stack(
@@ -295,6 +341,7 @@ class FederatedSimulation:
         hist.loss.append(float(metrics["loss"]))
         hist.kbar.append(float(metrics["kbar"]))
         self._record_dropped(hist, t, 1)
+        self._record_bytes(hist, 1, self.fed.n_clients)
 
     def _run_chunk(self, t0: int, r: int, hist: History) -> None:
         chunk_fn = self._chunk_fn(r)
@@ -308,6 +355,7 @@ class FederatedSimulation:
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
         self._record_dropped(hist, t0, r)
+        self._record_bytes(hist, r, self.fed.n_clients)
 
     # -- partial-participation execution (fed/population.py, DESIGN.md §10) --
 
@@ -341,6 +389,7 @@ class FederatedSimulation:
         hist.kbar.append(float(metrics["kbar"]))
         hist.mass.append(float(metrics["mass"]))
         self._record_dropped(hist, t, 1)
+        self._record_bytes(hist, 1, self.population.cohort_size)
 
     def _run_pop_chunk(self, t0: int, r: int, hist: History) -> None:
         chunk_fn = self._pop_chunk_fn(r)
@@ -383,6 +432,7 @@ class FederatedSimulation:
         hist.mass.extend(np.asarray(metrics["mass"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
         self._record_dropped(hist, t0, r)
+        self._record_bytes(hist, r, self.population.cohort_size)
 
     def run(self, t_rounds: int, eval_every: int = 1,
             verbose: bool = False,

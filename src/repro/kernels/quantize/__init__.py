@@ -1,0 +1,6 @@
+from repro.kernels.quantize.ops import (dequantize_2d, masked_abs_rowmax,
+                                        quantize_2d, row_scales,
+                                        topk_mask_2d, topk_thresholds)
+
+__all__ = ["quantize_2d", "dequantize_2d", "topk_mask_2d",
+           "masked_abs_rowmax", "row_scales", "topk_thresholds"]

@@ -1,0 +1,30 @@
+"""jnp oracles for the quantize kernels — the CPU execution path.
+
+Bitwise-identical arithmetic to kernel.py (same f32-internal ops in the
+same order); tests/test_compression.py pins kernel (interpret mode) ==
+oracle across shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_2d(x: jax.Array, scale: jax.Array,
+                qmax: int = 127) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale.astype(jnp.float32)),
+                 -float(qmax), float(qmax))
+    return q.astype(jnp.int8)
+
+
+def dequantize_2d(q: jax.Array, scale: jax.Array,
+                  out_dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)
+            ).astype(out_dtype)
+
+
+def topk_mask_2d(x: jax.Array, thresh: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    out = jnp.where(jnp.abs(xf) >= thresh.astype(jnp.float32), xf, 0.0)
+    return out.astype(x.dtype)

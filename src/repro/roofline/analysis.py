@@ -183,6 +183,36 @@ def layout_comparison(tree: Roofline, flat: Roofline,
     return out
 
 
+def bytes_on_the_wire(n_params: int, *, uses_nu: bool = True,
+                      compressor: str = "none",
+                      broadcast_compressor: str = "none",
+                      topk_frac: float = 0.05,
+                      participants: int = 1, rounds: int = 1) -> dict:
+    """Cross-device wire-traffic model for a federated run (DESIGN.md §14):
+    per-client payloads under the configured compressors (``payload_bytes``
+    formulas — scales/indices included), totals over ``participants``
+    reports × ``rounds``, and the uplink reduction factor vs fp32.  This is
+    the analytic twin of the measured ``History.bytes_up``/``bytes_down``
+    series; benchmarks/compression_bench.py pins the two against each
+    other."""
+    from repro.core.compress import CompressionConfig, wire_cost
+    comp = (None if compressor == "none" and broadcast_compressor == "none"
+            else CompressionConfig(uplink=compressor,
+                                   downlink=broadcast_compressor,
+                                   topk_frac=topk_frac))
+    per = wire_cost(n_params, uses_nu, comp)
+    scale = float(participants) * float(rounds)
+    return {
+        **per,
+        "uplink_total": scale * per["uplink_per_client"],
+        "downlink_total": scale * per["downlink_per_client"],
+        "uplink_reduction": (per["uplink_fp32_per_client"]
+                             / per["uplink_per_client"]),
+        "downlink_reduction": (per["downlink_fp32_per_client"]
+                               / per["downlink_per_client"]),
+    }
+
+
 def hlo_op_count(hlo_text: str) -> int:
     """Instruction count of the optimized module — the dispatch/scheduling
     load proxy used by the layout comparison."""

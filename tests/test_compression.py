@@ -1,0 +1,451 @@
+"""Wire compression stage (core/compress.py, DESIGN.md §14): quantize
+kernel/oracle pins, padding-safety invariants, the compressor="none"
+bit-identity matrix over algorithms × engines × layouts, error-feedback
+semantics under partial participation, and checkpoint round-trips of the
+(M, P) accumulators."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialize
+from repro.configs.base import FedConfig
+from repro.core.compress import (COMPRESSORS, CompressionConfig,
+                                 make_codec, payload_bytes, wire_cost)
+from repro.core.fedopt import ALGORITHMS
+from repro.core import flat as flat_mod
+from repro.data import DeviceBatcher, fedprox_synthetic
+from repro.fed import BufferedAsyncSimulation, FederatedSimulation
+from repro.kernels.quantize import kernel as qkernel
+from repro.kernels.quantize import ops as qops
+from repro.kernels.quantize import ref as qref
+from repro.models.simple import lr_loss
+from repro.roofline.analysis import bytes_on_the_wire
+
+M = 8
+NAMES = sorted(COMPRESSORS)
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    data, parts = fedprox_synthetic(key, M, alpha=1.0, beta=1.0)
+    return DeviceBatcher(data, parts, batch_size=8, seed=0)
+
+
+def _fed(**kw):
+    kw.setdefault("algorithm", "fedagrac")
+    kw.setdefault("k_mean", 5)
+    kw.setdefault("k_var", 2.0)
+    kw.setdefault("k_mode", "random")
+    return FedConfig(n_clients=M, lr=0.05, calibration_rate=0.5, **kw)
+
+
+def _params():
+    return {"w": jnp.zeros((60, 10)), "b": jnp.zeros((10,))}
+
+
+def _leaves_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# kernels: interpret-mode Pallas pinned bitwise to the jnp oracle
+# ---------------------------------------------------------------------------
+
+def _mat(rows=9, cols=256, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (rows, cols),
+                             jnp.float32) * 3.0
+
+
+@pytest.mark.parametrize("qmax", [127, 7])
+def test_quantize_kernel_matches_oracle(qmax):
+    x = _mat()
+    scale = qops.row_scales(x, x.shape[1], qmax)
+    k = qkernel.quantize_2d(x, scale, qmax=qmax, interpret=True)
+    r = qref.quantize_2d(x, scale, qmax=qmax)
+    assert k.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    assert int(np.abs(np.asarray(k)).max()) <= qmax
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_dequantize_kernel_matches_oracle(out_dtype):
+    x = _mat(seed=1)
+    scale = qops.row_scales(x, x.shape[1], 127)
+    q = qref.quantize_2d(x, scale, qmax=127)
+    k = qkernel.dequantize_2d(q, scale, out_dtype=out_dtype,
+                              interpret=True)
+    r = qref.dequantize_2d(q, scale, out_dtype=out_dtype)
+    assert k.dtype == jnp.dtype(out_dtype)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_topk_mask_kernel_matches_oracle():
+    x = _mat(seed=2)
+    th = qops.topk_thresholds(x, x.shape[1], 13)
+    k = qkernel.topk_mask_2d(x, th, interpret=True)
+    r = qref.topk_mask_2d(x, th)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    # at least k survivors per row (ties may keep more, wire charges k)
+    assert (np.count_nonzero(np.asarray(k), axis=1) >= 13).all()
+
+
+def test_dispatch_wrappers_route_to_oracle_off_tpu():
+    x = _mat(seed=3)
+    scale = qops.row_scales(x, x.shape[1], 127)
+    np.testing.assert_array_equal(
+        np.asarray(qops.quantize_2d(x, scale)),
+        np.asarray(qref.quantize_2d(x, scale)))
+
+
+# ---------------------------------------------------------------------------
+# scalar selection: padding is structurally excluded
+# ---------------------------------------------------------------------------
+
+def test_masked_rowmax_excludes_poisoned_padding():
+    n, p = 200, 256
+    x = _mat(rows=4, cols=p, seed=4)
+    poisoned = x.at[:, n:].set(1e9)
+    np.testing.assert_array_equal(
+        np.asarray(qops.masked_abs_rowmax(poisoned, n)),
+        np.asarray(qops.masked_abs_rowmax(x, n)))
+    amax = np.abs(np.asarray(x)[:, :n]).max(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(qops.masked_abs_rowmax(x, n)),
+                               amax, rtol=0)
+
+
+def test_topk_thresholds_never_select_padding():
+    n, p, k = 100, 256, 10
+    x = jnp.zeros((3, p)).at[:, :n].set(
+        _mat(rows=3, cols=n, seed=5)).at[:, n:].set(1e9)
+    th = qops.topk_thresholds(x, n, k)
+    # thresholds come from the true columns despite the enormous pad
+    assert float(th.max()) < 1e9
+
+
+def test_row_scales_eps_floor():
+    z = jnp.zeros((2, 128))
+    np.testing.assert_array_equal(np.asarray(qops.row_scales(z, 128, 127)),
+                                  np.full((2, 1), 1e-12, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# codecs: every compressor is padding-preserving and pad-scale-immune
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", NAMES)
+def test_codec_padding_stays_zero_and_scale_excludes_pad(name):
+    n, p = 300, 384
+    clean = jnp.zeros((5, p)).at[:, :n].set(_mat(rows=5, cols=n, seed=6))
+    poisoned = clean.at[:, n:].set(7e8)
+    codec = make_codec(name, n, topk_frac=0.05)
+    out_c, out_p = codec(clean), codec(poisoned)
+    if name == "none":
+        # identity codec: the pipeline never poisons padding upstream, so
+        # "none" must stay a bit-exact pass-through (the golden-pin path)
+        np.testing.assert_array_equal(np.asarray(out_c), np.asarray(clean))
+        return
+    # pad columns come out exactly zero, even from a poisoned pad
+    np.testing.assert_array_equal(np.asarray(out_c)[:, n:], 0.0)
+    np.testing.assert_array_equal(np.asarray(out_p)[:, n:], 0.0)
+    # a poisoned pad cannot perturb the true columns (scale immunity)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+
+
+def test_int8_codec_quantizes_to_levels():
+    n = 256
+    x = _mat(rows=2, cols=n, seed=7)
+    out = make_codec("int8", n)(x)
+    scale = np.asarray(qops.row_scales(x, n, 127))
+    levels = np.round(np.asarray(out) / scale)
+    np.testing.assert_allclose(np.asarray(out), levels * scale, atol=1e-6)
+    assert np.abs(levels).max() <= 127
+
+
+def test_unknown_compressor_raises_with_valid_names():
+    with pytest.raises(KeyError, match="int4"):
+        make_codec("gzip", 128)
+    with pytest.raises(KeyError, match="topk"):
+        payload_bytes("gzip", 128)
+
+
+# ---------------------------------------------------------------------------
+# wire model
+# ---------------------------------------------------------------------------
+
+def test_payload_bytes_formulas():
+    n = 610
+    assert payload_bytes("none", n) == 4 * n
+    assert payload_bytes("int8", n) == n + 4
+    assert payload_bytes("int4", n) == 305 + 4
+    k = max(1, round(0.05 * n))
+    assert payload_bytes("topk", n) == 8 * k
+    assert payload_bytes("topk+int8", n) == 5 * k + 4
+
+
+def test_wire_cost_doubles_for_nu_algorithms():
+    comp = CompressionConfig(uplink="int8")
+    one = wire_cost(100, False, comp)
+    two = wire_cost(100, True, comp)
+    assert two["uplink_per_client"] == 2 * one["uplink_per_client"]
+    assert one["downlink_per_client"] == 4 * 100  # downlink uncompressed
+
+
+def test_bytes_on_the_wire_reduction():
+    out = bytes_on_the_wire(610, uses_nu=True, compressor="int4",
+                            participants=10, rounds=5)
+    assert out["uplink_reduction"] > 4.0
+    assert out["uplink_total"] == 50 * out["uplink_per_client"]
+    none = bytes_on_the_wire(610, uses_nu=True)
+    assert none["uplink_reduction"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# config surface: validation + the deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_unknown_compressors():
+    with pytest.raises(ValueError, match="compressor"):
+        _fed(compressor="gzip")
+    with pytest.raises(ValueError, match="broadcast_compressor"):
+        _fed(broadcast_compressor="lz4")
+    with pytest.raises(ValueError, match="topk_frac"):
+        _fed(topk_frac=0.0)
+
+
+def test_quantize_transmit_deprecation_folds_into_compressor():
+    with pytest.warns(DeprecationWarning, match="compressor"):
+        fed = _fed(quantize_transmit=True)
+    assert fed.compressor == "int8"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert _fed().compressor == "none"
+
+
+# ---------------------------------------------------------------------------
+# compressor="none" bit-identity: algorithms × engines × layouts
+# ---------------------------------------------------------------------------
+
+def _none_kw():
+    return {"compressor": "none", "broadcast_compressor": "none",
+            "error_feedback": True}
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_none_bit_identical_sync(task, algorithm, layout):
+    fed_kw = {"algorithm": algorithm, "param_layout": layout}
+    ref = FederatedSimulation(lr_loss, _params(), _fed(**fed_kw), task)
+    ref.run(2, eval_every=2)
+    none = FederatedSimulation(lr_loss, _params(),
+                               _fed(**fed_kw, **_none_kw()), task)
+    none.run(2, eval_every=2)
+    _leaves_equal(ref.state, none.state)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_none_bit_identical_cohort(task, algorithm, layout):
+    fed_kw = {"algorithm": algorithm, "param_layout": layout,
+              "cohort_size": 4}
+    ref = FederatedSimulation(lr_loss, _params(), _fed(**fed_kw), task)
+    ref.run(2, eval_every=2)
+    none = FederatedSimulation(lr_loss, _params(),
+                               _fed(**fed_kw, **_none_kw()), task)
+    none.run(2, eval_every=2)
+    _leaves_equal(ref.state, none.state)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_none_bit_identical_async(task, algorithm, layout):
+    fed_kw = {"algorithm": algorithm, "param_layout": layout,
+              "buffer_size": 4, "staleness": "poly"}
+    ref = BufferedAsyncSimulation(lr_loss, _params(), _fed(**fed_kw), task)
+    ref.run(3)
+    none = BufferedAsyncSimulation(lr_loss, _params(),
+                                   _fed(**fed_kw, **_none_kw()), task)
+    none.run(3)
+    _leaves_equal(ref.state, none.state)
+
+
+# ---------------------------------------------------------------------------
+# compressed runs: layouts agree, error feedback engages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp,bc", [("int8", "none"), ("int4", "int8"),
+                                     ("topk", "none")])
+def test_compressed_layouts_agree(task, comp, bc):
+    """Tree (view-table bridged) and flat (native) compressed rounds run
+    the same arithmetic on different memory layouts — ULP-scale agreement,
+    the test_flat_layout convention."""
+    out = {}
+    for layout in ("tree", "flat"):
+        sim = FederatedSimulation(
+            lr_loss, _params(),
+            _fed(compressor=comp, broadcast_compressor=bc,
+                 param_layout=layout), task)
+        sim.run(3, eval_every=3)
+        out[layout] = jax.tree.leaves(sim.params)
+    for a, b in zip(out["tree"], out["flat"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_error_feedback_state_allocated_and_nonzero(task):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(compressor="int4",
+                                   broadcast_compressor="int8"), task)
+    sim.run(2, eval_every=2)
+    assert sim.state["ef_up"].shape == (M, sim._spec.p)
+    assert sim.state["ef_nu"].shape == (M, sim._spec.p)
+    assert sim.state["ef_down"].shape == (sim._spec.p,)
+    # quantization of real deltas leaves real residuals
+    assert np.abs(np.asarray(sim.state["ef_up"])).max() > 0
+    # the padding tail of every accumulator stays exactly zero
+    for key in ("ef_up", "ef_nu"):
+        np.testing.assert_array_equal(
+            np.asarray(sim.state[key])[:, sim._spec.n:], 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(sim.state["ef_down"])[sim._spec.n:], 0.0)
+
+
+def test_error_feedback_off_keeps_state_clean(task):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(compressor="int8",
+                                   error_feedback=False), task)
+    sim.run(2, eval_every=2)
+    assert "ef_up" not in sim.state and "ef_nu" not in sim.state
+
+
+# ---------------------------------------------------------------------------
+# EF semantics under partial participation: absentees wait untouched
+# ---------------------------------------------------------------------------
+
+def test_cohort_absentee_accumulators_untouched(task):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(compressor="int8", cohort_size=3), task)
+    before = np.asarray(sim.state["ef_up"]).copy()
+    sim.run(1)
+    ids = set(int(i) for i in sim.population.host_cohort(0)[0])
+    after = np.asarray(sim.state["ef_up"])
+    for i in range(M):
+        if i in ids:
+            assert np.abs(after[i]).max() > 0, f"participant {i} row clean"
+        else:
+            np.testing.assert_array_equal(after[i], before[i],
+                                          err_msg=f"absent client {i}")
+
+
+def test_async_nonreporter_accumulators_untouched(task):
+    sim = BufferedAsyncSimulation(lr_loss, _params(),
+                                  _fed(compressor="int8", buffer_size=3,
+                                       speed_dist="lognormal"), task)
+    from repro.fed.clock import simulate_timeline
+    tl = simulate_timeline(sim.k_schedule, sim.clock, sim.buffer, 2,
+                           population=sim.population)
+    sim.run(2)
+    reporters = set(int(i) for i in tl.ids[:2].ravel())
+    assert len(reporters) < M          # lognormal skew: someone is silent
+    after = np.asarray(sim.state["ef_up"])
+    for i in range(M):
+        if i in reporters:
+            assert np.abs(after[i]).max() > 0
+        else:
+            np.testing.assert_array_equal(after[i], 0.0,
+                                          err_msg=f"silent client {i}")
+
+
+def test_mid_round_dropout_keeps_nondelivered_residual(task):
+    """A mid-round dropout (k′ < K) still REPORTS its partial delta — its
+    accumulator updates like any reporter — but a client absent from the
+    cohort entirely must keep its residual bit-for-bit (never zeroed,
+    never renormalized)."""
+    fed = _fed(compressor="int8", cohort_size=3, scenario="dropout",
+               dropout_rate=0.5)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    sim.run(2)
+    before = np.asarray(sim.state["ef_up"]).copy()
+    sim.run(1)  # run() restarts t at 0: this round draws host_cohort(0)
+    ids = set(int(i) for i in sim.population.host_cohort(0)[0])
+    after = np.asarray(sim.state["ef_up"])
+    for i in range(M):
+        if i not in ids:
+            np.testing.assert_array_equal(after[i], before[i],
+                                          err_msg=f"absent client {i}")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: (M, P) accumulators round-trip bit-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+def test_checkpoint_roundtrips_ef_state(task, tmp_path, layout):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(compressor="int4",
+                                   broadcast_compressor="int8",
+                                   param_layout=layout), task)
+    sim.run(2, eval_every=2)
+    path = str(tmp_path / "state.msgpack")
+    serialize.save(path, sim.state)
+    restored = serialize.load(path, sim.state)
+    assert sorted(restored) == sorted(sim.state)
+    for key in ("ef_up", "ef_nu", "ef_down", "ef_down_nu"):
+        assert key in restored
+    _leaves_equal(sim.state, restored)
+
+
+def test_async_checkpoint_roundtrips_broadcast_carry(task, tmp_path):
+    sim = BufferedAsyncSimulation(lr_loss, _params(),
+                                  _fed(compressor="int8",
+                                       broadcast_compressor="int8",
+                                       buffer_size=4), task)
+    sim.run(2)
+    assert "bc_params" in sim.state and "bc_nu" in sim.state
+    path = str(tmp_path / "astate.msgpack")
+    serialize.save(path, sim.state)
+    restored = serialize.load(path, sim.state)
+    _leaves_equal(sim.state, restored)
+
+
+def test_flatten_state_passes_compression_keys_through(task):
+    sim = FederatedSimulation(lr_loss, _params(),
+                              _fed(compressor="int8"), task)
+    sim.run(1)
+    spec = sim._spec
+    flat_state = flat_mod.flatten_state(spec, sim.state)
+    assert flat_state["ef_up"] is sim.state["ef_up"]
+    back = flat_mod.unflatten_state(spec, flat_state)
+    assert back["ef_up"] is sim.state["ef_up"]
+    _leaves_equal(sim.state["params"], back["params"])
+
+
+# ---------------------------------------------------------------------------
+# quantize_int8_flat: masked scale + padding pin (legacy transmit path)
+# ---------------------------------------------------------------------------
+
+def test_quantize_int8_flat_padding_and_scale():
+    tree = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6) / 7.0,
+            "b": jnp.array([0.5, -2.0], jnp.float32)}
+    spec = flat_mod.make_flat_spec(tree)
+    rows = flat_mod.ravel(spec, jax.tree.map(
+        lambda x: jnp.stack([x, 2 * x]), tree), client_dims=1)
+    out = flat_mod.quantize_int8_flat(spec, rows)
+    # pad tail exactly zero
+    np.testing.assert_array_equal(np.asarray(out)[:, spec.n:], 0.0)
+    # per-leaf per-row scale semantics: each segment matches the explicit
+    # tree-path fake-quant of its own leaf
+    off = 0
+    for lv, size in zip(jax.tree.leaves(jax.tree.map(
+            lambda x: jnp.stack([x, 2 * x]), tree)), spec.sizes):
+        seg = np.asarray(out)[:, off:off + size]
+        a = np.asarray(lv).reshape(2, -1).astype(np.float32)
+        scale = np.maximum(np.abs(a).max(axis=1, keepdims=True) / 127.0,
+                           1e-12)
+        np.testing.assert_allclose(seg, np.round(a / scale) * scale,
+                                   rtol=1e-6, atol=1e-7)
+        off += size
