@@ -1,3 +1,3 @@
-from repro.checkpoint.serialize import load, save, save_every
+from repro.checkpoint.serialize import load, load_raw, save, save_every
 
-__all__ = ["load", "save", "save_every"]
+__all__ = ["load", "load_raw", "save", "save_every"]

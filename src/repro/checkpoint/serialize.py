@@ -77,6 +77,20 @@ def load(path: str, like: PyTree,
         treedef, [lv for lv in leaves])
 
 
+def load_raw(path: str) -> dict[str, np.ndarray]:
+    """Restore WITHOUT a ``like`` structure: the path-keyed flat dict of
+    arrays exactly as saved.  For consumers that define the schema
+    themselves (serving snapshots: serving/personalized.py) rather than
+    restoring into a live pytree."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    out = {}
+    for key, rec in payload.items():
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        out[key] = arr.reshape(rec["shape"])
+    return out
+
+
 def save_every(path_fmt: str, every: int):
     """Returns callback(round, tree) that saves every ``every`` rounds."""
     def cb(t: int, tree: PyTree) -> None:

@@ -436,12 +436,19 @@ class FederatedSimulation:
 
     def run(self, t_rounds: int, eval_every: int = 1,
             verbose: bool = False,
-            chunk_rounds: Optional[int] = None) -> History:
+            chunk_rounds: Optional[int] = None,
+            publish_fn: Optional[Callable[[dict], None]] = None,
+            publish_every: int = 0) -> History:
         """``chunk_rounds=None`` chunks at the eval cadence (``eval_every``);
         ``1`` forces the per-round compat loop.  Eval hooks fire at the same
         rounds regardless of chunking — chunks never cross an eval
         boundary, so an explicit ``chunk_rounds`` larger than ``eval_every``
-        is clamped (raise ``eval_every`` to actually chunk)."""
+        is clamped (raise ``eval_every`` to actually chunk).
+
+        ``publish_fn(snapshot)`` fires every ``publish_every`` rounds with a
+        versioned serving snapshot (``publish_snapshot``) — the hot-swap
+        feed for serving/personalized.py.  Chunks never cross a publish
+        boundary either, so publications see exact round states."""
         chunk = max(int(chunk_rounds if chunk_rounds is not None
                         else eval_every), 1)
         if (chunk_rounds is not None and chunk > eval_every
@@ -457,6 +464,8 @@ class FederatedSimulation:
             r = min(chunk, t_rounds - t)
             if self.eval_fn is not None or self.eval_per_client is not None:
                 r = min(r, eval_every - t % eval_every)
+            if publish_fn is not None and publish_every > 0:
+                r = min(r, publish_every - t % publish_every)
             if self._partial and r == 1:
                 self._run_pop_round(t, hist)
             elif self._partial:
@@ -466,6 +475,9 @@ class FederatedSimulation:
             else:
                 self._run_chunk(t, r, hist)
             t += r
+            if publish_fn is not None and publish_every > 0 \
+                    and t % publish_every == 0:
+                publish_fn(self.publish_snapshot())
             if t % eval_every == 0:
                 if self.eval_fn is not None:
                     hist.metric.append(float(self.eval_fn(self.params)))
@@ -487,6 +499,50 @@ class FederatedSimulation:
         if self.layout == "flat":
             return flat.unravel(self._spec, self.state["params"])
         return self.state["params"]
+
+    @property
+    def flat_spec(self) -> flat.FlatSpec:
+        """The FlatSpec describing this model's `(P,)` layout.  Flat runs
+        (and compressed tree runs) already own one; a plain tree run
+        builds and caches it on first use — the spec is pure shape
+        metadata, so this never perturbs the round state."""
+        if self._spec is None:
+            self._spec = flat.make_flat_spec(self.state["params"])
+        return self._spec
+
+    def publish_snapshot(self) -> dict:
+        """A versioned serving snapshot of the CURRENT training state:
+        the `(P,)` flat master plus the per-client calibration signal
+        (ν, ν⁽ⁱ⁾ rows) when the algorithm maintains one.  Version = round
+        counter, so every publication is totally ordered.  Consumed by
+        serving/personalized.py (view resolution + hot-swap)."""
+        spec = self.flat_spec
+        # snapshots OWN their buffers: chunked execution donates the state
+        # arrays to the next scan, which would delete aliased references
+        if self.layout == "flat":
+            master = jnp.array(self.state["params"])
+        else:
+            master = flat.ravel(spec, self.state["params"])
+        snap = {"version": np.int32(int(self.state["round"])),
+                "flat_master": master}
+        if self.algo.uses_nu and "nu" in self.state:
+            nu, nu_i = self.state["nu"], self.state["nu_i"]
+            if self.layout != "flat":
+                nu = flat.ravel(spec, nu)
+                nu_i = flat.ravel(spec, nu_i, client_dims=1)
+            else:
+                nu, nu_i = jnp.array(nu), jnp.array(nu_i)
+            snap["nu"] = nu
+            snap["nu_i"] = nu_i
+        return snap
+
+    def save_snapshot(self, path: str) -> dict:
+        """Publish + persist (checkpoint/serialize.py msgpack); the serving
+        side restores with ``serving.personalized.load_snapshot``."""
+        from repro.checkpoint import serialize
+        snap = self.publish_snapshot()
+        serialize.save(path, snap)
+        return snap
 
 
 def compare_algorithms(algorithms: list[str], make_sim: Callable[[str],

@@ -65,3 +65,47 @@ def lower_serve(cfg: ModelConfig, shape: ShapeConfig, mesh, *, kind: str):
             lowered = jitted.lower(bundle["params"], bundle["batch"],
                                    bundle["caches"], pos)
     return lowered, bundle
+
+
+def build_personalized_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                              spec):
+    """Personalized decode tick at pod scale (serving/personalized.py):
+    the `(P,)` flat base shards over the model axes with the SAME
+    ``flat_param_pspec`` rule the flat training state uses, the per-slot
+    `(B, P)` delta rows additionally shard their batch dim over the data
+    axes, and the per-slot rows (base + delta) feed the vmapped view-table
+    decode — one program serves every client's personalized view."""
+    from repro.serving.personalized import personalized_decode
+
+    set_mesh_rules(mesh, mesh_rules(mesh, kind="decode"))
+    bundle = specs_lib.serve_specs(cfg, shape, mesh, kind="decode")
+    sh = lambda t: specs_lib.to_shardings(t, mesh)
+    b = shape.global_batch
+    bundle["base"] = jax.ShapeDtypeStruct((spec.p,), spec.dtype)
+    bundle["base_ps"] = specs_lib.flat_param_pspec(mesh, spec.p)
+    bundle["deltas"] = jax.ShapeDtypeStruct((b, spec.p), spec.dtype)
+    bundle["delta_ps"] = specs_lib.flat_param_pspec(mesh, spec.p,
+                                                    client_dims=1)
+
+    def step(base, deltas, batch, caches, pos_offset):
+        rows = base[None] + deltas
+        return personalized_decode(spec, cfg, rows, batch["tokens"],
+                                   caches, pos_offset)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh(bundle["base_ps"]), sh(bundle["delta_ps"]),
+                      sh(bundle["batch_ps"]), sh(bundle["cache_ps"]), None),
+        out_shardings=(None, sh(bundle["cache_ps"])),
+    )
+    return jitted, bundle
+
+
+def lower_personalized_serve(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                             spec):
+    with use_mesh(mesh):
+        jitted, bundle = build_personalized_decode(cfg, shape, mesh, spec)
+        pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        lowered = jitted.lower(bundle["base"], bundle["deltas"],
+                               bundle["batch"], bundle["caches"], pos)
+    return lowered, bundle

@@ -1,3 +1,12 @@
 from repro.serving.engine import Completion, Request, ServeEngine
+from repro.serving.loadgen import LoadGen, latency_stats, replay
+from repro.serving.personalized import (PERSONALIZERS,
+                                        PersonalizedServeEngine,
+                                        load_snapshot, lowrank_factors,
+                                        make_personalizer, make_snapshot,
+                                        personalized_decode, save_snapshot)
 
-__all__ = ["Completion", "Request", "ServeEngine"]
+__all__ = ["Completion", "Request", "ServeEngine", "LoadGen", "replay",
+           "latency_stats", "PERSONALIZERS", "PersonalizedServeEngine",
+           "make_personalizer", "make_snapshot", "save_snapshot",
+           "load_snapshot", "lowrank_factors", "personalized_decode"]

@@ -9,12 +9,24 @@ phases coexist in one pool and finished requests free their slot
 immediately (no head-of-line blocking).  vLLM's loop, reduced to the
 positional ring cache.
 
+Sampling is a pure function of the REQUEST, never of co-scheduled
+traffic: each sampled token draws from ``fold_in(PRNGKey(uid), step)``
+(step = tokens already emitted), so a request's completion is
+bit-identical whatever else shares the pool and whatever order admissions
+happen in.  The admission hot path is O(1) per admit: a deque queue and
+ONE preallocated single-slot cache template reused for every prefill (the
+prefill step is functional — the template is never written).
+
 Single-host execution; the pod-scale serve path (launch/serve.py) lowers
-the same step functions with sharded caches.
+the same step functions with sharded caches.  Per-client personalized
+parameter views and checkpoint hot-swap live in the subclass
+(serving/personalized.py), which overrides the ``_prefill_slot`` /
+``_decode_tick`` / ``_slot_version`` hooks below.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Optional
 
 import jax
@@ -31,6 +43,7 @@ class Request:
     prompt: np.ndarray                 # (S,) int32 token ids
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1 = never stops early
+    client_id: int = 0                 # personalization key (serving/personalized.py)
 
 
 @dataclasses.dataclass
@@ -39,10 +52,17 @@ class Completion:
     tokens: list[int]
     prompt_len: int
     ticks: int                         # decode ticks consumed
+    client_id: int = 0
+    version: int = 0                   # snapshot the request was served under
 
 
 class ServeEngine:
-    """``submit()`` requests, ``run()`` until drained."""
+    """``submit()`` requests, ``run()`` until drained.
+
+    ``sampler(logits, key) -> token`` operates on ONE row of (V,) logits
+    with that request's per-step key; the engine vmaps it over the slot
+    pool.  Default: greedy argmax (key unused).
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, prefill_buckets=(32, 64, 128, 256),
@@ -61,11 +81,16 @@ class ServeEngine:
 
         self.caches = model_lib.init_caches(cfg, slots, max_len,
                                             jnp.dtype(cfg.dtype))
+        # ONE reusable single-slot cache: prefill is functional (returns
+        # fresh arrays), so the pristine template serves every admission —
+        # no per-admit init_caches pytree allocation
+        self._single = model_lib.init_caches(cfg, 1, max_len,
+                                             jnp.dtype(cfg.dtype))
         self.pos = np.zeros(slots, np.int32)        # next position per slot
         self.active: list[Optional[Request]] = [None] * slots
         self.emitted: dict[int, list[int]] = {}
         self.started: dict[int, int] = {}
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.done: list[Completion] = []
         self.ticks = 0
 
@@ -77,6 +102,12 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, toks, caches, offs: model_lib.serve_decode(
                 p, {"tokens": toks}, caches, offs, cfg))
+        # per-(request, step) sampling keys: completions are bit-identical
+        # regardless of batch composition and admission order
+        self._keys_for = jax.jit(jax.vmap(
+            lambda uid, step: jax.random.fold_in(jax.random.PRNGKey(uid),
+                                                 step)))
+        self._sample = jax.jit(jax.vmap(self.sampler))
 
     # -- public api ----------------------------------------------------------
 
@@ -84,11 +115,17 @@ class ServeEngine:
         assert len(req.prompt) <= max(self.buckets), "prompt too long"
         self.queue.append(req)
 
+    def step(self) -> None:
+        """One scheduler step: admit waiting requests into free slots, then
+        decode one token for every live slot.  Public for trace-driven
+        drivers (serving/loadgen.py)."""
+        self._admit()
+        self._tick()
+
     def run(self, max_ticks: int = 10_000) -> list[Completion]:
         while (self.queue or any(a is not None for a in self.active)) \
                 and self.ticks < max_ticks:
-            self._admit()
-            self._tick()
+            self.step()
         return self.done
 
     @property
@@ -107,20 +144,19 @@ class ServeEngine:
         for s in range(self.slots):
             if self.active[s] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             n = len(req.prompt)
             b = self._bucket(n)
             padded = np.zeros(b, np.int32)
             padded[:n] = req.prompt                    # RIGHT-pad: prompt
             # tokens never attend pads (causal), pads are invalidated below
-            single = model_lib.init_caches(self.cfg, 1, self.max_len,
-                                           jnp.dtype(self.cfg.dtype))
-            logits, single = self._prefill(self.params,
-                                           jnp.asarray(padded)[None], single)
+            logits, single = self._prefill_slot(
+                s, req, jnp.asarray(padded)[None], self._single)
             single = _invalidate_pads(single, n, b)
             self.caches = _write_slot(self.caches, single, s)
-            tok = int(np.asarray(self.sampler(
-                logits[:, n - 1], jax.random.PRNGKey(req.uid)))[0])
+            key = self._keys_for(jnp.asarray([req.uid], jnp.int32),
+                                 jnp.asarray([0], jnp.int32))
+            tok = int(np.asarray(self._sample(logits[:, n - 1], key))[0])
             self.active[s] = req
             self.pos[s] = n
             self.emitted[req.uid] = [tok]
@@ -132,15 +168,16 @@ class ServeEngine:
             return
         self.ticks += 1
         toks = np.zeros((self.slots, 1), np.int32)
+        uids = np.zeros(self.slots, np.int32)
+        steps = np.zeros(self.slots, np.int32)
         for s in live:
-            toks[s, 0] = self.emitted[self.active[s].uid][-1]
-        # ONE batched decode at per-slot offsets; idle slots decode a
-        # dummy token into their own (soon-overwritten) rows
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(self.pos, jnp.int32))
-        arr = np.asarray(self.sampler(logits[:, 0],
-                                      jax.random.PRNGKey(self.ticks)))
+            req = self.active[s]
+            toks[s, 0] = self.emitted[req.uid][-1]
+            uids[s] = req.uid
+            steps[s] = len(self.emitted[req.uid])
+        logits = self._decode_tick(toks, live)
+        keys = self._keys_for(jnp.asarray(uids), jnp.asarray(steps))
+        arr = np.asarray(self._sample(logits, keys))
         for s in live:
             req = self.active[s]
             tok = int(arr[s])
@@ -151,11 +188,32 @@ class ServeEngine:
                 self.done.append(Completion(
                     uid=req.uid, tokens=self.emitted.pop(req.uid),
                     prompt_len=len(req.prompt),
-                    ticks=self.ticks - self.started.pop(req.uid)))
+                    ticks=self.ticks - self.started.pop(req.uid),
+                    client_id=req.client_id,
+                    version=self._slot_version(s)))
                 self.active[s] = None
         for s in range(self.slots):
             if self.active[s] is None:
                 self.pos[s] = 0         # park idle slots at position 0
+
+    # -- subclass hooks (serving/personalized.py) ----------------------------
+
+    def _prefill_slot(self, s: int, req: Request, toks, caches):
+        """Prefill into slot ``s`` — subclasses resolve per-request
+        parameter views here.  Returns (full logits, filled 1-row cache)."""
+        return self._prefill(self.params, toks, caches)
+
+    def _decode_tick(self, toks: np.ndarray, live: list[int]) -> jax.Array:
+        """ONE batched decode at per-slot offsets; idle slots decode a
+        dummy token into their own (soon-overwritten) rows.  Returns the
+        (B, V) next-token logits."""
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos, jnp.int32))
+        return logits[:, 0]
+
+    def _slot_version(self, s: int) -> int:
+        return 0
 
 
 def _invalidate_pads(single, n: int, b: int):

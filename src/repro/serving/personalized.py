@@ -1,0 +1,318 @@
+"""Per-client personalized serving over the shared flat master buffer.
+
+FedaGrac training already maintains a per-client correction signal — the
+`(M, P)` ν⁽ⁱ⁾ rows the calibration stage aggregates against the global
+orientation ν.  This module puts that signal to work at inference: every
+``Request.client_id`` resolves to a personalized parameter VIEW
+
+    row(cid) = flat_master + delta(cid)
+
+where the delta comes from a pluggable ``PERSONALIZERS`` registry
+(mirroring the stage/compressor registry idiom, DESIGN.md §2):
+
+    "none"     delta = 0 — pure shared base; the engine serves through the
+               EXACT code path of the plain ServeEngine (golden-pinned).
+    "nu"       delta = scale · (ν⁽ⁱ⁾[cid] − ν) — one calibrated correction
+               step toward the client's own gradient direction.  Storage is
+               the training-state (M, P) rows: right for training-sized
+               populations, not for millions of clients.
+    "lowrank"  delta = scale · coeff[cid] @ basis — an (M, r) coefficient
+               table against a shared (r, P) orthonormal basis
+               (``lowrank_factors`` builds both from the ν rows).  O(M·r)
+               storage + O(r·P) resolve: the serving-scale representation.
+
+Resolution happens ONCE per request, at admission: the summed `(P,)` row
+and the snapshot version are pinned to the slot, so requests from
+different clients (and different snapshot versions) batch into one decode
+tick, and a checkpoint **hot-swap** between ticks can never perturb an
+in-flight request — its pinned row and its KV cache both predate the
+swap.  ``swap()`` installs a new versioned snapshot for NEW admissions
+only; completions record the version they were served under.
+
+Decode ticks pick the cheapest sound path per composition:
+
+  * all live slots share one version, no deltas → ONE shared batched
+    decode with that version's materialized param tree — the identical
+    jaxpr the plain engine runs (this is what makes the "none" golden pin
+    structural rather than numerical);
+  * several versions live, still no deltas → one shared decode per live
+    version over the full pool, then a per-slot axis-2 splice (batch rows
+    are independent, pinned by tests/test_serving_engine.py);
+  * any slot carries a delta → the vmapped row path: per-slot `(P,)`
+    buffers viewed through the FlatSpec table inside a batch-1 decode,
+    vmapped over the pool (cache batch axis = 2 throughout).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import serialize
+from repro.configs.base import ModelConfig
+from repro.core import flat as flat_lib
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServeEngine
+
+Snapshot = Dict[str, Any]
+
+# -- snapshots ----------------------------------------------------------------
+
+
+def make_snapshot(version: int, flat_master, nu=None, nu_i=None,
+                  coeff=None, basis=None) -> Snapshot:
+    """A versioned publication of training state: the `(P,)` master plus
+    whatever per-client signal the personalizer kind needs."""
+    snap: Snapshot = {"version": np.int32(version),
+                      "flat_master": jnp.asarray(flat_master)}
+    for k, v in (("nu", nu), ("nu_i", nu_i),
+                 ("coeff", coeff), ("basis", basis)):
+        if v is not None:
+            snap[k] = jnp.asarray(v)
+    return snap
+
+
+def save_snapshot(path: str, snap: Snapshot) -> None:
+    serialize.save(path, snap)
+
+
+def load_snapshot(path: str) -> Snapshot:
+    raw = serialize.load_raw(path)
+    raw["version"] = np.int32(raw["version"])
+    return {k: (v if k == "version" else jnp.asarray(v))
+            for k, v in raw.items()}
+
+
+def lowrank_factors(nu_i, nu, r: int):
+    """Factor the ν correction rows into `(M, r)` coefficients against a
+    shared `(r, P)` orthonormal basis (QR of the row space), so serving
+    stores O(M·r + r·P) instead of O(M·P).  Exact when rank(rows) ≤ r."""
+    rows = jnp.asarray(nu_i) - jnp.asarray(nu)[None]      # (M, P)
+    q = jnp.linalg.qr(rows.T)[0]                          # (P, min(M, P))
+    r = min(r, q.shape[1])
+    basis = q[:, :r].T                                    # (r, P) orthonormal
+    coeff = rows @ basis.T                                # (M, r)
+    return coeff, basis
+
+
+# -- personalizer registry ----------------------------------------------------
+# Each entry: (snapshot, scale) -> resolve(client_id) -> (P,) delta | None.
+# None means "serve the shared base" — both the "none" kind and cold-start
+# clients outside the stored population land there, which keeps the shared
+# (bit-identical, cheaper) decode path reachable per-slot.
+
+
+def _resolve_none(snap: Snapshot, scale: float) -> Callable:
+    return lambda cid: None
+
+
+def _resolve_nu(snap: Snapshot, scale: float) -> Callable:
+    nu_i, nu = snap.get("nu_i"), snap.get("nu")
+    if nu_i is None or nu is None:
+        raise ValueError('personalizer "nu" needs snapshot keys '
+                         '"nu_i" and "nu"')
+    m = nu_i.shape[0]
+
+    def resolve(cid: int):
+        if not 0 <= cid < m:
+            return None                          # cold start → shared base
+        return scale * (nu_i[cid] - nu)
+    return resolve
+
+
+def _resolve_lowrank(snap: Snapshot, scale: float) -> Callable:
+    coeff, basis = snap.get("coeff"), snap.get("basis")
+    if coeff is None or basis is None:
+        raise ValueError('personalizer "lowrank" needs snapshot keys '
+                         '"coeff" and "basis" (see lowrank_factors)')
+    m = coeff.shape[0]
+
+    def resolve(cid: int):
+        if not 0 <= cid < m:
+            return None
+        return scale * (coeff[cid] @ basis)      # (r,) @ (r, P)
+    return resolve
+
+
+PERSONALIZERS: Dict[str, Callable] = {
+    "none": _resolve_none,
+    "nu": _resolve_nu,
+    "lowrank": _resolve_lowrank,
+}
+
+
+def make_personalizer(name: str, snap: Snapshot,
+                      scale: float = 1.0) -> Callable:
+    if name not in PERSONALIZERS:
+        raise ValueError(f"unknown personalizer {name!r}; "
+                         f"choose from {sorted(PERSONALIZERS)}")
+    return PERSONALIZERS[name](snap, scale)
+
+
+# -- functional decode core ---------------------------------------------------
+
+
+def personalized_decode(spec: flat_lib.FlatSpec, cfg: ModelConfig,
+                        rows, tokens, caches, offsets):
+    """Batched decode where every slot runs its OWN `(P,)` parameter row
+    through the FlatSpec view table: vmap of a batch-1 ``serve_decode``
+    over (row, token, cache-row, offset).  Cache leaves carry their batch
+    dim at axis 2 (`(n_groups, count, B, …)`, models/model.py init_caches),
+    so the whole cache pytree maps with a uniform axis.  Shared core of
+    the engine's row path and the launch/serve.py sharded lowering."""
+    def one(row, tok, cache, off):
+        params = flat_lib.view_tree(spec, row)
+        c1 = jax.tree.map(lambda x: x[:, :, None], cache)
+        logits, c1 = model_lib.serve_decode(
+            params, {"tokens": tok[None]}, c1, off, cfg)
+        return logits[0, 0], jax.tree.map(lambda x: x[:, :, 0], c1)
+
+    return jax.vmap(one, in_axes=(0, 0, 2, 0), out_axes=(0, 2))(
+        rows, tokens, caches, offsets)
+
+
+# -- the engine ---------------------------------------------------------------
+
+
+class PersonalizedServeEngine(ServeEngine):
+    """ServeEngine where ``Request.client_id`` selects a parameter view and
+    ``swap(snapshot)`` hot-swaps the base between ticks."""
+
+    def __init__(self, cfg: ModelConfig, spec: flat_lib.FlatSpec,
+                 snapshot: Snapshot, *, personalizer: str = "none",
+                 scale: float = 1.0, **kw):
+        self.spec = spec
+        self.kind = personalizer
+        self.scale = scale
+        self._versions: Dict[int, dict] = {}
+        self.version = self._register(snapshot)
+        # per-slot pins, set at admission: snapshot version, and (row path
+        # only) the summed (P,) parameter row
+        super().__init__(cfg, self._versions[self.version]["params"], **kw)
+        self._slot_ver: list[Optional[int]] = [None] * self.slots
+        self._slot_row: list[Optional[jax.Array]] = [None] * self.slots
+        self._flat_prefill = jax.jit(
+            lambda row, toks, caches: model_lib.forward(
+                flat_lib.view_tree(spec, row), {"tokens": toks}, cfg,
+                caches=caches)[:2])
+        self._row_decode = jax.jit(
+            lambda rows, toks, caches, offs: personalized_decode(
+                spec, cfg, rows, toks, caches, offs))
+
+    # -- snapshot lifecycle ---------------------------------------------------
+
+    def _register(self, snap: Snapshot) -> int:
+        v = int(snap["version"])
+        base = jnp.asarray(snap["flat_master"])
+        # materialize the view ONCE per version: the shared decode path
+        # then runs the plain engine's params-tree jaxpr on concrete
+        # arrays — bit-identity with ServeEngine is structural
+        params = jax.tree.map(jnp.asarray,
+                              flat_lib.view_tree(self.spec, base))
+        self._versions[v] = {
+            "base": base,
+            "params": params,
+            "resolve": make_personalizer(self.kind, snap, self.scale),
+        }
+        return v
+
+    def swap(self, snap: Snapshot) -> int:
+        """Install a new snapshot for FUTURE admissions.  In-flight slots
+        keep their pinned version/rows and their caches — a swap between
+        ticks cannot change any already-admitted request's tokens."""
+        self.version = self._register(snap)
+        self.params = self._versions[self.version]["params"]
+        self._gc_versions()
+        return self.version
+
+    def _gc_versions(self) -> None:
+        live = {self.version} | {v for v in self._slot_ver if v is not None}
+        for v in [v for v in self._versions if v not in live]:
+            del self._versions[v]
+
+    def resolve(self, client_id: int):
+        """The current version's delta for ``client_id`` (None = base)."""
+        return self._versions[self.version]["resolve"](client_id)
+
+    # -- engine hooks ---------------------------------------------------------
+
+    def step(self) -> None:
+        super().step()
+        for s in range(self.slots):
+            if self.active[s] is None:
+                self._slot_ver[s] = None
+                self._slot_row[s] = None
+        self._gc_versions()
+
+    def _prefill_slot(self, s: int, req: Request, toks, caches):
+        v = self.version
+        ver = self._versions[v]
+        delta = ver["resolve"](req.client_id)
+        self._slot_ver[s] = v
+        if delta is None:
+            # shared base: the plain engine's prefill jaxpr, this
+            # version's materialized tree
+            self._slot_row[s] = None
+            return self._prefill(ver["params"], toks, caches)
+        # pin the SUMMED row now — later swaps can't touch it
+        self._slot_row[s] = ver["base"] + jnp.asarray(delta)
+        return self._flat_prefill(self._slot_row[s], toks, caches)
+
+    def _decode_tick(self, toks: np.ndarray, live: list[int]):
+        if any(self._slot_row[s] is not None for s in live):
+            return self._decode_rows(toks)
+        versions = sorted({self._slot_ver[s] for s in live})
+        if len(versions) == 1:
+            # plain engine fast path (and the "none" golden pin)
+            self.params = self._versions[versions[0]]["params"]
+            return super()._decode_tick(toks, live)
+        return self._decode_grouped(toks, live, versions)
+
+    def _decode_rows(self, toks: np.ndarray):
+        """Row path: every slot decodes its own pinned `(P,)` buffer; slots
+        without a delta (or idle) use their pinned — or current — base."""
+        cur = self._versions[self.version]["base"]
+        rows = jnp.stack([
+            self._slot_row[s] if self._slot_row[s] is not None
+            else self._versions[self._slot_ver[s]]["base"]
+            if self._slot_ver[s] is not None else cur
+            for s in range(self.slots)])
+        logits, self.caches = self._row_decode(
+            rows, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos, jnp.int32))
+        return logits
+
+    def _decode_grouped(self, toks: np.ndarray, live: list[int],
+                        versions: list[int]):
+        """Several snapshot versions share the pool (hot-swap with base-only
+        slots in flight): run the shared batched decode once PER VERSION
+        over the full pool, keep each slot's row from its own version's
+        call.  Row independence makes the splice bit-exact."""
+        tok_dev = jnp.asarray(toks)
+        offs = jnp.asarray(self.pos, jnp.int32)
+        outs = {v: self._decode(self._versions[v]["params"], tok_dev,
+                                self.caches, offs) for v in versions}
+        cache = outs[versions[0]][1]
+        logits = np.asarray(outs[versions[0]][0][:, 0]).copy()
+        for v in versions[1:]:
+            lv, cv = outs[v]
+            for s in live:
+                if self._slot_ver[s] == v:
+                    logits[s] = np.asarray(lv[s, 0])
+                    cache = _take_slot(cache, cv, s)
+        self.caches = cache
+        return jnp.asarray(logits)
+
+    def _slot_version(self, s: int) -> int:
+        return self._slot_ver[s] or 0
+
+
+def _take_slot(dst, src, s: int):
+    """Copy batch row ``s`` (cache axis 2) from ``src`` into ``dst``."""
+    def w(d, o):
+        if d.ndim >= 3 and d.shape == o.shape:
+            return d.at[:, :, s:s + 1].set(o[:, :, s:s + 1])
+        return d
+    return jax.tree.map(w, dst, src)

@@ -93,3 +93,34 @@ def test_engine_rejects_ssm(setup):
     cfg = reduced(get_arch("xlstm-125m"))
     with pytest.raises(AssertionError):
         ServeEngine(cfg, {}, slots=1)
+
+
+def test_sampling_independent_of_coscheduled_traffic(setup):
+    """A request's sampled tokens depend only on (uid, step) — serving it
+    alone and serving it among other traffic are bit-identical, for a
+    key-USING sampler (determinism pin: keys are fold_in(PRNGKey(uid),
+    step), never a function of tick count or batch composition)."""
+    cfg, params = setup
+    sampler = lambda logits, key: jax.random.categorical(key, logits)
+    rng = np.random.default_rng(7)
+    target = Request(uid=42,
+                     prompt=rng.integers(1, cfg.vocab, 9).astype(np.int32),
+                     max_new_tokens=6)
+    noise = [Request(uid=i,
+                     prompt=rng.integers(1, cfg.vocab, 4 + i).astype(
+                         np.int32),
+                     max_new_tokens=3 + i) for i in range(4)]
+
+    def serve(reqs, slots):
+        eng = ServeEngine(cfg, params, slots=slots, max_len=128,
+                          prefill_buckets=(8, 16), sampler=sampler)
+        for r in reqs:
+            eng.submit(dataclasses.replace(r))
+        return {c.uid: c.tokens for c in eng.run()}
+
+    alone = serve([target], 1)[42]
+    crowded = serve(noise[:2] + [target] + noise[2:], 3)[42]
+    assert alone == crowded
+    # and admission ORDER does not matter either
+    reordered = serve([target] + noise, 2)[42]
+    assert alone == reordered
