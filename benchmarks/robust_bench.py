@@ -1,0 +1,202 @@
+"""Attack × defense survival grid: Byzantine-robust aggregation
+(core/robust.py, fed/scenarios.py, DESIGN.md §16).
+
+Claim validated: FedaGrac is *more* exposed to corrupted payloads than
+plain FedAvg — a poisoned report enters not just the model average but
+the broadcast orientation ν, so one bad client deteriorates every
+client's local direction next round — and the robust-aggregation layer
+rehabilitates it: with a defense composed in front of the aggregator
+(and the health quarantine absorbing repeat offenders), fedagrac reaches
+the accuracy target under attacks where the undefended run diverges
+outright (NaN injection poisons the master within one round; the eval
+guard raises) or stalls below target (scale / sign-flip payloads).
+
+The grid crosses payload-corruption scenario × defense on the
+synchronous engine and reports final accuracy, rounds-to-target,
+quarantined-client rounds, and whether the run survived (finite metric
+to the end).  A second table ablates the ν defense: defending the model
+average while leaving the ν stream undefended (``nu_defense=False``)
+shows the calibration channel is an attack surface of its own.
+
+Writes ``BENCH_robust.json`` at the repo root; CI uploads it as an
+artifact alongside the scenario and compression reports.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import M_CLIENTS, emit, make_task
+from repro.configs.base import FedConfig
+from repro.fed import FederatedSimulation
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+TARGET = 0.70
+K_MEAN = 40
+
+# attack name -> FedConfig knobs (resolved by make_scenario)
+ATTACK_KNOBS = {
+    "clean": {},
+    "nan_inject": {"scenario_rate": 0.3},
+    "scale_attack": {"scenario_rate": 0.3, "scenario_magnitude": 25.0},
+    "sign_flip": {"scenario_rate": 0.3},
+    "garbage": {"scenario_rate": 0.3, "scenario_magnitude": 10.0},
+}
+
+DEFENSES = ("none", "clip", "median", "trimmed_mean", "krum")
+
+
+def _one(attack: str, defense: str, rounds: int, *,
+         nu_defense: bool = True, algorithm: str = "fedagrac") -> dict:
+    m = M_CLIENTS
+    task = make_task("lr", noniid=True)
+    knobs = dict(ATTACK_KNOBS[attack])
+    fed = FedConfig(algorithm=algorithm, n_clients=m, lr=task.lr,
+                    k_mean=K_MEAN, k_var=0.3, k_mode="random",
+                    calibration_rate=0.5, weights="data",
+                    scenario=attack if attack != "clean" else "baseline",
+                    defense=defense, nu_defense=nu_defense,
+                    quarantine_window=4 if defense != "none" else 0,
+                    **knobs)
+    sim = FederatedSimulation(task.loss_fn, task.params, fed, task.batcher,
+                              eval_fn=task.eval_fn)
+    try:
+        hist = sim.run(rounds, eval_every=1)
+        # survived = the master is still finite (accuracy of NaN logits is
+        # finite — argmax picks class 0 — so the metric alone can't tell)
+        survived = all(bool(np.all(np.isfinite(np.asarray(leaf))))
+                       for leaf in jax.tree.leaves(sim.params))
+        # final = tail mean: the LR task oscillates round to round, a
+        # single last eval is a coin flip around the plateau
+        final = float(np.mean(hist.metric[-5:]))
+        r = hist.rounds_to_target(TARGET)
+        quar = float(np.sum(hist.quarantined)) if hist.quarantined else 0.0
+    except FloatingPointError:
+        # the eval guard fired: non-finite metric at the host readback
+        survived, final, r, quar = False, None, None, 0.0
+    return {
+        "algorithm": algorithm,
+        "attack": attack,
+        "defense": defense,
+        "nu_defense": nu_defense,
+        "survived": survived,
+        "final_acc": final,
+        "rounds_to_target": r,
+        "reached_target": final is not None and final >= TARGET,
+        "quarantined_rounds": quar,
+    }
+
+
+def main(quick: bool = False) -> None:
+    rounds = 40 if quick else 80
+    attacks = (("clean", "nan_inject", "scale_attack", "sign_flip")
+               if quick else tuple(ATTACK_KNOBS))
+    defenses = (("none", "median", "trimmed_mean")
+                if quick else DEFENSES)
+
+    rows, table = [], []
+    for attack in attacks:
+        for defense in defenses:
+            r = _one(attack, defense, rounds)
+            table.append(r)
+            rt = r["rounds_to_target"]
+            rows.append((
+                attack, defense,
+                "yes" if r["survived"] else "DIVERGED",
+                f"{r['final_acc']:.4f}" if r["final_acc"] is not None
+                else "-",
+                rt if rt is not None else f">{rounds}",
+                f"{r['quarantined_rounds']:.0f}",
+            ))
+    emit(rows, ("attack", "defense", "survived", "final_acc",
+                f"rounds_to_{int(TARGET * 100)}", "quarantined"))
+
+    def cell(attack, defense):
+        return next(r for r in table if r["attack"] == attack
+                    and r["defense"] == defense)
+
+    # ν-defense ablation: same attack + defense, model-only vs model+ν
+    ablation = []
+    for nu_def in (False, True):
+        r = _one("sign_flip", "median", rounds, nu_defense=nu_def)
+        ablation.append(r)
+    abl = {
+        "attack": "sign_flip",
+        "defense": "median",
+        "model_only_acc": ablation[0]["final_acc"],
+        "model_and_nu_acc": ablation[1]["final_acc"],
+        "nu_defense_helps": (
+            ablation[0]["final_acc"] is None
+            or (ablation[1]["final_acc"] is not None
+                and ablation[1]["final_acc"]
+                >= ablation[0]["final_acc"] - 0.01)),
+    }
+
+    def final(attack, defense):
+        v = cell(attack, defense)["final_acc"]
+        return -1.0 if v is None else v
+
+    rescued = {
+        a: {
+            "undefended_final": final(a, "none"),
+            "best_defended_final": max(final(a, d) for d in defenses
+                                       if d != "none"),
+            "undefended_reaches": cell(a, "none")["reached_target"],
+            "best_defended_reaches": any(
+                cell(a, d)["reached_target"] for d in defenses
+                if d != "none"),
+        }
+        for a in attacks if a != "clean"
+    }
+    survival = {
+        # the headline: ≥1 attack where a defense reaches the target
+        # plateau and the undefended run does not
+        "defense_rescues_some_attack": any(
+            v["best_defended_reaches"] and not v["undefended_reaches"]
+            for v in rescued.values()),
+        # and under EVERY attack the best defense beats undefended by a
+        # clear margin (NaN injection can't reach the clean plateau —
+        # the quarantined clients' data is simply gone — but the defended
+        # run is far above the poisoned one)
+        "defended_gains_everywhere": all(
+            v["best_defended_final"] >= v["undefended_final"] + 0.05
+            for v in rescued.values()),
+        "rescued": rescued,
+        "undefended_nan_diverges": not cell("nan_inject", "none")[
+            "survived"] if "nan_inject" in attacks else None,
+        "nu_ablation": abl,
+    }
+    report = {
+        "table": table,
+        "ablation": ablation,
+        "survival": survival,
+        "meta": {
+            "quick": quick,
+            "target": TARGET,
+            "rounds": rounds,
+            "k_local_steps": K_MEAN,
+            "attack_knobs": ATTACK_KNOBS,
+            "claim": "robust aggregation + health quarantine let fedagrac "
+                     "reach the target under payload corruption that "
+                     "diverges or stalls the undefended run; defending "
+                     "the ν stream matters on top of the model average",
+        },
+    }
+    out = ROOT / "BENCH_robust.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    n_rescued = sum(v["best_defended_reaches"]
+                    and not v["undefended_reaches"]
+                    for v in rescued.values())
+    gains = survival["defended_gains_everywhere"]
+    print(f"# wrote {out} — defense rescues {n_rescued}/{len(rescued)} "
+          f"attacks to the {TARGET:.2f} plateau; defended gains "
+          f"everywhere: {'OK' if gains else 'NO'}; ν-defense helps: "
+          f"{'OK' if abl['nu_defense_helps'] else 'NO'}")
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -14,10 +14,10 @@ import traceback
 from benchmarks import (ablation_int8_nu, compression_bench, engine_bench,
                         fairness, fig2_lambda, fig3_orientation, fig4_grid,
                         fig5_curves, kernel_bench, lm_bench,
-                        population_bench, roofline_table, scenario_bench,
-                        server_opt, serving_bench, table1_deterioration,
-                        table2_utilization, table6_rounds, table_async,
-                        thm1_quadratic)
+                        population_bench, robust_bench, roofline_table,
+                        scenario_bench, server_opt, serving_bench,
+                        table1_deterioration, table2_utilization,
+                        table6_rounds, table_async, thm1_quadratic)
 
 MODULES = {
     "thm1": thm1_quadratic,
@@ -39,6 +39,7 @@ MODULES = {
     "lm": lm_bench,
     "population": population_bench,
     "scenarios": scenario_bench,
+    "robust": robust_bench,
     "serving": serving_bench,
 }
 

@@ -295,6 +295,28 @@ class FedConfig:
     # compressor="int8" (which now compresses the delta AND ν, with error
     # feedback) and warns; use compressor= directly.
     quantize_transmit: bool = False
+    # -- Byzantine-robust aggregation (core/robust.py, DESIGN.md §16) ---------
+    # defense: one of the DEFENSES registry ("none" | "clip" | "median" |
+    # "trimmed_mean" | "krum"), applied to the client→server delta rows
+    # (and, when nu_defense, the ν transmit rows) before the aggregators.
+    # Attacks are scenarios: scenario ∈ {"nan_inject", "inf_inject",
+    # "scale_attack", "sign_flip", "garbage"} with scenario_rate the
+    # corrupt-client fraction and scenario_magnitude the attack strength.
+    # quarantine_window > 0 turns on per-client health tracking: a client
+    # whose payload is non-finite quarantine_nonfinite times, or whose
+    # delta-norm z-score exceeds quarantine_z after warmup, is excluded
+    # from aggregation and ν mixing for that many rounds (weights are
+    # Horvitz–Thompson renormalized over the survivors).  defense="none"
+    # with quarantine_window=0 is trace-time gated: the round builders
+    # emit the identical (golden-pinned) jaxpr.
+    defense: str = "none"
+    defense_clip: float = 0.0              # clip: fixed norm; 0 ⇒ adaptive (median of norms)
+    trim_frac: float = 0.2                 # trimmed_mean: trim fraction per tail, in [0, 0.5)
+    krum_f: int = 1                        # krum: assumed Byzantine count f
+    nu_defense: bool = True                # also defend ν (ablation: False = model-only)
+    quarantine_window: int = 0             # rounds a flagged client sits out (0 = off)
+    quarantine_z: float = 4.0              # delta-norm z-score threshold
+    quarantine_nonfinite: int = 1          # non-finite reports before quarantine
 
     def __post_init__(self):
         """Fail at construction, not as a registry KeyError inside jit:
@@ -304,6 +326,7 @@ class FedConfig:
 
         from repro.core.compress import COMPRESSORS
         from repro.core.fedopt import ALGORITHMS
+        from repro.core.robust import DEFENSES
         from repro.core.stages import SERVER_OPTIMIZERS
         from repro.fed.population import SAMPLERS
         from repro.fed.scenarios import SCENARIOS
@@ -339,6 +362,24 @@ class FedConfig:
                 f"buffer); the tree layout keeps per-leaf dtypes")
         _check("server_opt", self.server_opt, SERVER_OPTIMIZERS)
         _check("scenario", self.scenario, SCENARIOS)
+        _check("defense", self.defense, DEFENSES)
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(f"trim_frac {self.trim_frac} not in [0, 0.5) "
+                             f"(trimming both tails must leave rows)")
+        if self.defense_clip < 0:
+            raise ValueError(f"defense_clip must be ≥ 0 (0 = adaptive), "
+                             f"got {self.defense_clip}")
+        if self.krum_f < 0:
+            raise ValueError(f"krum_f must be ≥ 0, got {self.krum_f}")
+        if self.quarantine_window < 0:
+            raise ValueError(f"quarantine_window must be ≥ 0, "
+                             f"got {self.quarantine_window}")
+        if self.quarantine_nonfinite < 1:
+            raise ValueError(f"quarantine_nonfinite must be ≥ 1, "
+                             f"got {self.quarantine_nonfinite}")
+        if self.quarantine_z <= 0:
+            raise ValueError(f"quarantine_z must be > 0, "
+                             f"got {self.quarantine_z}")
         _check("staleness", self.staleness, ("constant", "hinge", "poly"))
         _check("speed_dist", self.speed_dist,
                ("fixed", "uniform", "lognormal", "bimodal", "trace"))

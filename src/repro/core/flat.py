@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress, stages
+from repro.core import robust as robust_mod
 from repro.core.fedopt import Algorithm
 from repro.core.tree_util import tree_wsum
 from repro.kernels.calibrated_update import ref as cu_ref
@@ -287,10 +288,13 @@ def flatten_state(spec: FlatSpec, state: dict) -> dict:
     moments become (P,) buffers, ν⁽ⁱ⁾ an (M, P) matrix).  Compression
     residuals / broadcast carries (``compress.FLAT_STATE_KEYS``) are
     flat-NATIVE on both layouts — the tree round compresses through the
-    view table — so they pass through unchanged."""
+    view table — so they pass through unchanged; the (M,) client-health
+    vectors (``robust.ROBUST_STATE_KEYS``) are layout-independent and do
+    the same."""
     out = {}
     for k, v in state.items():
-        if k == "round" or k in compress.FLAT_STATE_KEYS:
+        if (k == "round" or k in compress.FLAT_STATE_KEYS
+                or k in robust_mod.ROBUST_STATE_KEYS):
             out[k] = v
         elif k == "nu_i":
             out[k] = ravel(spec, v, client_dims=1)
@@ -302,7 +306,8 @@ def flatten_state(spec: FlatSpec, state: dict) -> dict:
 def unflatten_state(spec: FlatSpec, state: dict) -> dict:
     out = {}
     for k, v in state.items():
-        if k == "round" or k in compress.FLAT_STATE_KEYS:
+        if (k == "round" or k in compress.FLAT_STATE_KEYS
+                or k in robust_mod.ROBUST_STATE_KEYS):
             out[k] = v
         elif k == "nu_i":
             out[k] = unravel(spec, v, client_dims=1)
@@ -488,7 +493,7 @@ def make_flat_round(spec: FlatSpec,
                     algo: Algorithm, *, lr: float, k_max: int,
                     track_nu: str = "delta",
                     quantize_transmit: bool = False,
-                    compression=None,
+                    compression=None, robust=None, attack=None,
                     use_pallas: Optional[bool] = None,
                     param_constraint: Optional[Callable[[jax.Array, int],
                                                         jax.Array]] = None):
@@ -496,15 +501,20 @@ def make_flat_round(spec: FlatSpec,
     ``round_fn(state, batches, k_steps, weights, lam=None)``, state leaves
     flat (``flatten_state``).  Aggregation / orientation / server-opt call
     the SAME registry functions as the tree round — on one (M, P) leaf.
-    The compression stage (core/compress.py) is flat-NATIVE here: every
-    transmitted quantity already lives on (rows, P), so the codecs apply
-    with no ravel bridge."""
+    The compression stage (core/compress.py) — and likewise the
+    corruption/defense bracket (``attack``/``robust``, DESIGN.md §16) —
+    is flat-NATIVE here: every transmitted quantity already lives on
+    (rows, P), so the codecs apply with no ravel bridge."""
     client_update = make_flat_client_update(
         spec, loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         use_pallas=use_pallas)
     aggregate = stages.AGGREGATORS[algo.aggregator]
     cs = compress.build_stages(compression, spec, algo.uses_nu,
                                use_pallas=use_pallas)
+    rb = robust_mod.build_round_robust(robust, spec, algo.uses_nu)
+    atk = attack if (attack is not None
+                     and attack.corrupts_payload) else None
+    wire = cs is not None or rb is not None or atk is not None
     down_on = cs is not None and cs.down is not None
     up_on = cs is not None and cs.up is not None
 
@@ -537,13 +547,24 @@ def make_flat_round(spec: FlatSpec,
         x_i = constrain(x_i, 1)
         kf = k_steps.astype(jnp.float32)
 
-        if up_on:
-            d_hat = cs.up(x_i - anchor[None], state, new_state)
-            x_srv = anchor[None] + d_hat
+        w_agg = weights
+        if wire:
+            d = x_i - anchor[None]
+            if atk is not None:
+                d = atk.corrupt_delta(state["round"], d, spec.n,
+                                      ids=jnp.arange(x_i.shape[0],
+                                                     dtype=jnp.int32))
+            if up_on:
+                d = cs.up(d, state, new_state)
+            if rb is not None:
+                d, w_agg, qcount = rb.model(
+                    d, weights, state, new_state, state["round"],
+                    jnp.arange(x_i.shape[0], dtype=jnp.int32))
+            x_srv = anchor[None] + d
         else:
             x_srv = x_i
 
-        agg = aggregate(anchor, x_srv, kf, weights, kbar)
+        agg = aggregate(anchor, x_srv, kf, w_agg, kbar)
         if down_on:
             # clients averaged around the broadcast x̂; re-base the result
             # onto the TRUE master so downlink error never accumulates
@@ -561,12 +582,30 @@ def make_flat_round(spec: FlatSpec,
                 spec, algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
                 lam, track_nu=track_nu,
                 quantize_transmit=quantize_transmit)
+            w_nu = weights
+            if atk is not None:
+                transmit = atk.corrupt_nu(
+                    state["round"], transmit, spec.n,
+                    ids=jnp.arange(x_i.shape[0], dtype=jnp.int32))
             if up_on:
                 transmit = cs.up_nu(transmit, state, new_state)
-            new_state["nu"] = constrain(tree_wsum(weights, transmit), 0)
+            if rb is not None:
+                transmit, w_nu = rb.nu(
+                    transmit, weights, state, state["round"],
+                    jnp.arange(x_i.shape[0], dtype=jnp.int32))
+            new_state["nu"] = constrain(tree_wsum(w_nu, transmit), 0)
             new_state["nu_i"] = constrain(avg_g, 1)
 
+        if rb is not None:
+            new_state["params"] = rb.guard(new_state["params"], params0)
+            if algo.uses_nu:
+                new_state["nu"] = rb.guard(new_state["nu"], state["nu"])
+                new_state["nu_i"] = rb.guard(new_state["nu_i"],
+                                             state["nu_i"])
+
         metrics = {"loss": jnp.dot(weights, loss0), "kbar": kbar}
+        if rb is not None:
+            metrics["quarantined"] = qcount
         return new_state, metrics
 
     return round_fn
@@ -582,7 +621,7 @@ def make_flat_cohort_round(spec: FlatSpec,
                            nu_decay: float = 0.0,
                            track_nu: str = "delta",
                            quantize_transmit: bool = False,
-                           compression=None,
+                           compression=None, robust=None, attack=None,
                            use_pallas: Optional[bool] = None,
                            param_constraint: Optional[Callable] = None):
     """Flat twin of ``stages.make_cohort_round``: the cohort's ν⁽ⁱ⁾ gather
@@ -596,6 +635,10 @@ def make_flat_cohort_round(spec: FlatSpec,
     aggregate = stages.BUFFERED_AGGREGATORS[algo.aggregator]
     cs = compress.build_stages(compression, spec, algo.uses_nu,
                                use_pallas=use_pallas)
+    rb = robust_mod.build_round_robust(robust, spec, algo.uses_nu)
+    atk = attack if (attack is not None
+                     and attack.corrupts_payload) else None
+    wire = cs is not None or rb is not None or atk is not None
     down_on = cs is not None and cs.down is not None
     up_on = cs is not None and cs.up is not None
 
@@ -629,15 +672,23 @@ def make_flat_cohort_round(spec: FlatSpec,
                                                 k_steps, lam)
         x_i = constrain(x_i, 1)
 
-        if up_on:
-            d_hat = cs.up(x_i - anchor[None], state, new_state, ids=cohort)
-            x_srv = anchor[None] + d_hat
+        w_agg = cweights
+        if wire:
+            d = x_i - anchor[None]
+            if atk is not None:
+                d = atk.corrupt_delta(state["round"], d, spec.n, ids=cohort)
+            if up_on:
+                d = cs.up(d, state, new_state, ids=cohort)
+            if rb is not None:
+                d, w_agg, qcount = rb.model(d, cweights, state, new_state,
+                                            state["round"], cohort)
+            x_srv = anchor[None] + d
         else:
             x_srv = x_i
 
         # buffered aggregator takes base and anchors separately: base is
         # the TRUE master, deltas measured vs the broadcast — no re-base
-        agg = aggregate(params0, anchor[None], x_srv, kf, cweights, kbar)
+        agg = aggregate(params0, anchor[None], x_srv, kf, w_agg, kbar)
         new_params = stages.server_update(algo, state, params0, agg,
                                           new_state)
         new_params = constrain(new_params, 0)
@@ -649,17 +700,33 @@ def make_flat_cohort_round(spec: FlatSpec,
                 spec, algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr,
                 lam, track_nu=track_nu,
                 quantize_transmit=quantize_transmit)
+            w_nu = cweights
+            if atk is not None:
+                transmit = atk.corrupt_nu(state["round"], transmit, spec.n,
+                                          ids=cohort)
             if up_on:
                 transmit = cs.up_nu(transmit, state, new_state, ids=cohort)
-            contrib = tree_wsum(cweights, transmit)
+            if rb is not None:
+                transmit, w_nu = rb.nu(transmit, cweights, state,
+                                       state["round"], cohort)
+            contrib = tree_wsum(w_nu, transmit)
             new_nu = stages.nu_mass_mix(state["nu"], contrib, mass)
             new_state["nu"] = constrain(new_nu, 0)
             new_state["nu_i"] = constrain(
                 stages.scatter_nu_rows(state["nu_i"], new_nu, avg_g,
                                        cohort, nu_decay), 1)
 
+        if rb is not None:
+            new_state["params"] = rb.guard(new_state["params"], params0)
+            if algo.uses_nu:
+                new_state["nu"] = rb.guard(new_state["nu"], state["nu"])
+                new_state["nu_i"] = rb.guard(new_state["nu_i"],
+                                             state["nu_i"])
+
         metrics = {"loss": jnp.dot(cweights, loss0) / mass, "kbar": kbar,
                    "mass": mass}
+        if rb is not None:
+            metrics["quarantined"] = qcount
         return new_state, metrics
 
     return round_fn

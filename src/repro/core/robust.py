@@ -1,0 +1,316 @@
+"""Byzantine-robust aggregation: DEFENSES registry, health quarantine,
+and the final non-finite guard (DESIGN.md §16).
+
+Threat model: a client payload — the delta rows ``x_i − anchor`` and the
+ν transmit rows, i.e. exactly what crosses the wire — may be arbitrary:
+NaN/Inf, maliciously scaled, sign-flipped, or resampled noise (the attack
+models live in ``fed/scenarios.py``).  FedaGrac makes this worse than
+plain FedAvg: one bad row poisons not just the model but the broadcast
+orientation ν, deteriorating *every* client's local direction next round.
+So every defense here composes at the same point on both payloads:
+
+    delta rows ─ sanitize → quarantine → defend → HT-renormalize ─→ agg
+    ν rows     ─ sanitize → quarantine → [defend if nu_defense] ─→ ν mix
+
+``defense="none"`` with ``quarantine_window=0`` is trace-time gated:
+``RobustConfig.from_fed`` returns ``None`` and the round builders bake the
+literally unchanged round (same contract as ``core/compress.py``).
+
+Pipeline contract (``RoundRobust.model`` / ``.nu``): inputs are ``(B, P)``
+lane-padded rows and ``(B,)`` weights; padding columns are zeroed on
+entry, rows with any non-finite value are dropped, quarantined clients
+(``hz_until[id] > round``, read from PRE-round state) are dropped, the
+defense transform may drop more (krum) or recentre (median/trimmed_mean),
+and finally Horvitz–Thompson renormalization rescales the surviving
+weights so their sum equals the original total — the downstream
+aggregators (absolute weighted mean, fednova, ν mass-mixing) all key on
+Σw, reusing the PR-4 population machinery unchanged.  If nothing
+survives, the original weights are kept and ALL delta rows are zeroed:
+the weighted mean then returns the anchor and the round is a no-op
+(weight-zeroing alone would collapse the absolute mean to 0).
+
+Health state (five ``(M,)`` vectors, layout-independent, checkpointed
+bit-exactly; absent clients' rows untouched): running non-finite counts
+and an EWMA of delta norms; a client is quarantined for
+``quarantine_window`` rounds when its non-finite count reaches
+``quarantine_nonfinite`` or its norm z-score exceeds ``quarantine_z``
+after ``HEALTH_WARMUP`` finite reports.  Async caveat: duplicate ids in
+one buffer flush scatter with ``.at[].add`` for counters and last-wins
+``.at[].set`` for the EWMA — same contract as the ν⁽ⁱ⁾ scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+# finite sentinel for sort/distance padding — NOT inf, so the pairwise
+# krum distances never produce inf − inf = NaN under masking
+_BIG = 1e30
+HEALTH_EWMA = 0.2        # EWMA step for the per-client delta-norm stats
+HEALTH_WARMUP = 3        # finite reports required before z-score flagging
+
+# extra (M,) engine-state vectors; flatten_state passes them through
+# unchanged on the flat layout (same contract as compress.FLAT_STATE_KEYS)
+ROBUST_STATE_KEYS = ("hz_nonfinite", "hz_mean", "hz_var", "hz_count",
+                     "hz_until")
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Resolved robustness knobs; ``from_fed`` returns None when inactive
+    so the round builders emit the identical jaxpr."""
+    defense: str = "none"
+    clip_norm: float = 0.0      # 0 → adaptive: median of surviving norms
+    trim_frac: float = 0.2
+    krum_f: int = 1
+    nu_defense: bool = True     # ablation knob: defend ν too, not just x
+    quarantine_window: int = 0
+    quarantine_z: float = 4.0
+    quarantine_nonfinite: int = 1
+
+    @classmethod
+    def from_fed(cls, fed) -> Optional["RobustConfig"]:
+        if fed.defense == "none" and fed.quarantine_window == 0:
+            return None
+        return cls(defense=fed.defense, clip_norm=fed.defense_clip,
+                   trim_frac=fed.trim_frac, krum_f=fed.krum_f,
+                   nu_defense=fed.nu_defense,
+                   quarantine_window=fed.quarantine_window,
+                   quarantine_z=fed.quarantine_z,
+                   quarantine_nonfinite=fed.quarantine_nonfinite)
+
+    @property
+    def defends(self) -> bool:
+        return self.defense != "none"
+
+    @property
+    def quarantines(self) -> bool:
+        return self.quarantine_window > 0
+
+
+# ---------------------------------------------------------------------------
+# defense transforms — factories (cfg, n) -> fn(rows, mask) -> (rows, mask)
+#
+# Invariants on entry: rows are f32, padding columns zeroed, dead rows'
+# DATA zeroed (0·NaN = NaN in a downstream einsum, and jnp.median
+# propagates NaN — masking the weight alone is not enough).  A transform
+# may shrink the mask (krum) but never grows it.
+# ---------------------------------------------------------------------------
+
+def _none(cfg: RobustConfig, n: int):
+    def fn(rows, mask):
+        return rows, mask
+    return fn
+
+
+def _clip(cfg: RobustConfig, n: int):
+    """Per-client norm clipping; threshold fixed (clip_norm > 0) or the
+    median of the surviving rows' norms (adaptive)."""
+    def fn(rows, mask):
+        norms = jnp.sqrt(jnp.sum(rows * rows, axis=-1))
+        if cfg.clip_norm > 0:
+            tau = jnp.float32(cfg.clip_norm)
+        else:
+            med = jnp.nanmedian(jnp.where(mask, norms, jnp.nan))
+            tau = jnp.nan_to_num(med, nan=0.0)
+        scale = jnp.where(norms > tau, tau / jnp.maximum(norms, _EPS), 1.0)
+        return rows * scale[:, None], mask
+    return fn
+
+
+def _median(cfg: RobustConfig, n: int):
+    """Coordinate-wise median over surviving rows, broadcast back to every
+    survivor — the weighted mean downstream then returns the median."""
+    def fn(rows, mask):
+        r = jnp.where(mask[:, None], rows, jnp.nan)
+        center = jnp.nan_to_num(jnp.nanmedian(r, axis=0), nan=0.0)
+        out = jnp.where(mask[:, None], center[None, :], 0.0)
+        return out, mask
+    return fn
+
+
+def _trimmed_mean(cfg: RobustConfig, n: int):
+    """Coordinate-wise trimmed mean: per column, sort the surviving values
+    (dead rows pushed past the live range with a finite sentinel), drop the
+    k smallest and k largest, average the middle."""
+    def fn(rows, mask):
+        b = rows.shape[0]
+        k = max(1, int(round(cfg.trim_frac * b)))
+        live = jnp.sum(mask.astype(jnp.int32))
+        srt = jnp.sort(jnp.where(mask[:, None], rows, _BIG), axis=0)
+        idx = jnp.arange(b)
+        keep = (idx >= k) & (idx < live - k)
+        denom = jnp.maximum(live - 2 * k, 1).astype(jnp.float32)
+        center = jnp.sum(jnp.where(keep[:, None], srt, 0.0), axis=0) / denom
+        out = jnp.where(mask[:, None], center[None, :], 0.0)
+        return out, mask
+    return fn
+
+
+def _krum(cfg: RobustConfig, n: int):
+    """Multi-krum distance filtering: score each row by the sum of squared
+    distances to its q = B − f − 2 nearest survivors, keep the B − f
+    lowest-scoring rows (drop the f most isolated)."""
+    def fn(rows, mask):
+        b = rows.shape[0]
+        f = max(0, int(cfg.krum_f))
+        sq = jnp.sum((rows[:, None, :] - rows[None, :, :]) ** 2, axis=-1)
+        dead = ~mask
+        sq = jnp.where(dead[:, None] | dead[None, :], _BIG, sq)
+        sq = sq + jnp.eye(b, dtype=sq.dtype) * _BIG   # exclude self
+        q = max(b - f - 2, 1)
+        scores = jnp.sum(jnp.sort(sq, axis=1)[:, :q], axis=1)
+        scores = jnp.where(mask, scores, jnp.inf)     # dead rows sort last
+        keep_n = max(b - f, 1)
+        sel = jnp.zeros((b,), bool).at[jnp.argsort(scores)[:keep_n]].set(True)
+        new_mask = mask & sel
+        return jnp.where(new_mask[:, None], rows, 0.0), new_mask
+    return fn
+
+
+DEFENSES = {
+    "none": _none,
+    "clip": _clip,
+    "median": _median,
+    "trimmed_mean": _trimmed_mean,
+    "krum": _krum,
+}
+
+
+# ---------------------------------------------------------------------------
+# pipeline pieces
+# ---------------------------------------------------------------------------
+
+def _renorm(rows_f, out_dtype, weights, mask):
+    """Horvitz–Thompson renormalization: rescale surviving weights so
+    Σw is preserved (the aggregators and ν mass-mixing key on it).  If
+    nothing survives, keep the ORIGINAL weights and zero every row — the
+    absolute weighted mean then returns the anchor (a no-op round)."""
+    mf = mask.astype(jnp.float32)
+    tot0 = jnp.sum(weights)
+    w1 = weights * mf
+    alive = jnp.sum(w1)
+    ok = alive > 0
+    scale = jnp.where(ok, tot0 / jnp.maximum(alive, _EPS), 0.0)
+    w_out = jnp.where(ok, w1 * scale, weights)
+    rows_out = jnp.where(ok, rows_f * mf[:, None], jnp.zeros_like(rows_f))
+    return rows_out.astype(out_dtype), w_out
+
+
+def _health_update(cfg: RobustConfig, state, new_state, ids, rfin, finite,
+                   quar, r):
+    """Update the per-client health vectors from this round's reports.
+
+    ``rfin`` is finite-masked (NOT quarantine-masked): quarantined rows
+    freeze their EWMA (``upd`` gate) so serving a quarantine never drags
+    the baseline toward zero.  z-scores use the PRE-update stats, so a
+    client cannot shift its own baseline in the round it attacks.
+    """
+    a = HEALTH_EWMA
+    norms = jnp.sqrt(jnp.sum(rfin * rfin, axis=-1))
+    nf1 = state["hz_nonfinite"].at[ids].add((~finite).astype(jnp.int32))
+    mean_g = state["hz_mean"][ids]
+    var_g = state["hz_var"][ids]
+    cnt_g = state["hz_count"][ids]
+    until_g = state["hz_until"][ids]
+    upd = finite & ~quar
+    z = (norms - mean_g) * jax.lax.rsqrt(var_g + jnp.float32(_EPS))
+    zbad = upd & (cnt_g >= HEALTH_WARMUP) & (z > cfg.quarantine_z)
+    nfbad = (~finite) & (nf1[ids] >= cfg.quarantine_nonfinite)
+    flag = zbad | nfbad
+    new_until = jnp.where(flag, r + 1 + cfg.quarantine_window, until_g)
+    first = cnt_g == 0
+    m1 = jnp.where(first, norms, (1 - a) * mean_g + a * norms)
+    m1 = jnp.where(upd, m1, mean_g)
+    v1 = jnp.where(first, jnp.zeros_like(var_g),
+                   (1 - a) * var_g + a * (norms - m1) ** 2)
+    v1 = jnp.where(upd, v1, var_g)
+    new_state["hz_nonfinite"] = nf1
+    new_state["hz_mean"] = state["hz_mean"].at[ids].set(m1)
+    new_state["hz_var"] = state["hz_var"].at[ids].set(v1)
+    new_state["hz_count"] = state["hz_count"].at[ids].add(
+        upd.astype(jnp.int32))
+    new_state["hz_until"] = state["hz_until"].at[ids].set(new_until)
+
+
+def init_robust_state(state: dict, robust: Optional[RobustConfig],
+                      n_clients: int) -> dict:
+    """Allocate the (M,) health vectors when quarantine is on."""
+    if robust is None or not robust.quarantines:
+        return state
+    state["hz_nonfinite"] = jnp.zeros((n_clients,), jnp.int32)
+    state["hz_mean"] = jnp.zeros((n_clients,), jnp.float32)
+    state["hz_var"] = jnp.zeros((n_clients,), jnp.float32)
+    state["hz_count"] = jnp.zeros((n_clients,), jnp.int32)
+    state["hz_until"] = jnp.zeros((n_clients,), jnp.int32)
+    return state
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobust:
+    """Trace-time-resolved robust stages for one round builder.
+
+    ``model(rows, weights, state, new_state, r, ids)`` →
+    ``(rows, weights, quarantined)``; ``nu(rows, weights, state, r, ids)``
+    → ``(rows, weights)``; ``guard(new, old)`` keeps ``old`` wherever
+    ``new`` is non-finite (the final stage — a defended run never writes
+    NaN into the flat master).
+    """
+    config: RobustConfig
+    n: int
+    model: Callable
+    nu: Callable
+    guard: Callable
+
+
+def build_round_robust(robust: Optional[RobustConfig], spec,
+                       uses_nu: bool) -> Optional[RoundRobust]:
+    if robust is None:
+        return None
+    if spec is None:
+        raise ValueError("robust aggregation requires a FlatSpec — the "
+                         "engines build one on both param layouts")
+    cfg = robust
+    n = spec.n
+    defense_fn = DEFENSES[cfg.defense](cfg, n)
+
+    def _sanitize(rows):
+        rf = rows.astype(jnp.float32)
+        rf = jnp.where(jnp.arange(rf.shape[-1]) < n, rf, 0.0)
+        return rf, jnp.all(jnp.isfinite(rf), axis=-1)
+
+    def model(rows, weights, state, new_state, r, ids):
+        rf0, finite = _sanitize(rows)
+        if cfg.quarantines:
+            quar = state["hz_until"][ids] > r
+            qcount = jnp.sum(quar.astype(jnp.float32))
+            rfin = jnp.where(finite[:, None], rf0, 0.0)
+            _health_update(cfg, state, new_state, ids, rfin, finite, quar, r)
+        else:
+            quar = jnp.zeros(finite.shape, bool)
+            qcount = jnp.zeros((), jnp.float32)
+        mask = finite & ~quar
+        rf = jnp.where(mask[:, None], rf0, 0.0)
+        rf, mask = defense_fn(rf, mask)
+        rows_out, w_out = _renorm(rf, rows.dtype, weights, mask)
+        return rows_out, w_out, qcount
+
+    def nu(rows, weights, state, r, ids):
+        rf0, finite = _sanitize(rows)
+        mask = finite
+        if cfg.quarantines:
+            mask = mask & ~(state["hz_until"][ids] > r)
+        rf = jnp.where(mask[:, None], rf0, 0.0)
+        if cfg.defends and cfg.nu_defense:
+            rf, mask = defense_fn(rf, mask)
+        return _renorm(rf, rows.dtype, weights, mask)
+
+    def guard(new, old):
+        return jax.tree.map(
+            lambda a, b: jnp.where(jnp.isfinite(a), a, b), new, old)
+
+    return RoundRobust(config=cfg, n=n, model=model, nu=nu, guard=guard)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compress
+from repro.core import robust as robust_mod
 from repro.core.fedopt import Algorithm
 from repro.core.stages import make_layered_round, quantize_int8
 from repro.core.tree_util import tree_stack_zeros, tree_zeros
@@ -45,7 +46,7 @@ PyTree = Any
 
 
 def init_state(params: PyTree, n_clients: int, algo: Algorithm,
-               compression=None, spec=None) -> dict:
+               compression=None, spec=None, robust=None) -> dict:
     """Server + client state.  ν/ν⁽ⁱ⁾ start at zero: the first round then
     runs plain (uncalibrated) local SGD, matching the paper's init where
     ν⁽ⁱ⁾ = ∇f_i(x₁) is unknown before any gradient is computed.
@@ -54,7 +55,10 @@ def init_state(params: PyTree, n_clients: int, algo: Algorithm,
     error-feedback accumulators are allocated as flat-layout leaves — an
     (M, P) row block per uplink quantity, (P,) per broadcast — on BOTH
     param layouts (the tree round compresses through the view table, so
-    its residuals are flat too); ``spec`` supplies (P, dtype)."""
+    its residuals are flat too); ``spec`` supplies (P, dtype).  An active
+    ``robust`` config with quarantine on (core/robust.py, DESIGN.md §16)
+    adds the per-client (M,) health vectors — layout-independent, so no
+    spec is needed."""
     state = {"params": params, "round": jnp.zeros((), jnp.int32)}
     if algo.uses_nu:
         state["nu"] = tree_zeros(params)
@@ -70,6 +74,7 @@ def init_state(params: PyTree, n_clients: int, algo: Algorithm,
                              "both layouts by the engines)")
         compress.init_compression_state(state, compression, n_clients,
                                         spec.p, spec.dtype, algo.uses_nu)
+    robust_mod.init_robust_state(state, robust, n_clients)
     return state
 
 
@@ -78,7 +83,7 @@ def make_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                track_nu: str = "delta",
                spmd_axis_name=None,
                quantize_transmit: bool = False,
-               compression=None, spec=None,
+               compression=None, spec=None, robust=None, attack=None,
                param_constraint: Optional[Callable[[PyTree, int], PyTree]] = None):
     """Build ``round_fn(state, batches, k_steps, weights[, lam]) ->
     (state, metrics)`` by composing the stages for ``algo``.
@@ -89,10 +94,13 @@ def make_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     λ-schedules reuse one compiled round.  ``param_constraint(tree,
     n_client_dims)`` optionally pins shardings at round boundaries.
     ``compression`` (+ its ``spec``) inserts the wire-compression stage
-    (core/compress.py, DESIGN.md §14); None bakes the unchanged round.
+    (core/compress.py, DESIGN.md §14); ``attack``/``robust`` bracket the
+    same wire boundary with payload corruption and the robust-aggregation
+    defense (core/robust.py, DESIGN.md §16).  None bakes the unchanged
+    round.
     """
     return make_layered_round(
         loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         spmd_axis_name=spmd_axis_name, quantize_transmit=quantize_transmit,
-        compression=compression, spec=spec,
+        compression=compression, spec=spec, robust=robust, attack=attack,
         param_constraint=param_constraint)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compress
+from repro.core import robust as robust_mod
 from repro.core.fedopt import Algorithm
 from repro.core.tree_util import expand, tree_wsum, tree_zeros
 
@@ -426,7 +427,8 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                        track_nu: str = "delta",
                        spmd_axis_name=None,
                        quantize_transmit: bool = False,
-                       compression=None, spec=None,
+                       compression=None, spec=None, robust=None,
+                       attack=None,
                        param_constraint: Optional[Callable[[PyTree, int],
                                                            PyTree]] = None):
     """Compose the four stages into the synchronous round function.
@@ -443,14 +445,30 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     are compressed with per-client error feedback, all through the flat
     view table of ``spec``.  None (or an all-"none" config) bakes the
     literally unchanged round — the golden bit-identity contract.
+
+    ``attack`` (a payload-corrupting Scenario, fed/scenarios.py) and
+    ``robust`` (a RobustConfig, core/robust.py, DESIGN.md §16) bracket the
+    same wire boundary: corruption applies to what each client puts on the
+    wire (delta + ν transmit, before uplink compression), the defense to
+    what the server takes off it (after decompression, before the
+    aggregators and the ν mix).  Both are trace-time gated like
+    compression: None bakes the identical round.
     """
     client_update = make_client_update(
         loss_fn, algo, lr=lr, k_max=k_max, track_nu=track_nu,
         spmd_axis_name=spmd_axis_name)
     aggregate = AGGREGATORS[algo.aggregator]
     cs = compress.build_stages(compression, spec, algo.uses_nu)
-    if cs is not None:
+    rb = robust_mod.build_round_robust(robust, spec, algo.uses_nu)
+    atk = attack if (attack is not None
+                     and attack.corrupts_payload) else None
+    if atk is not None and spec is None:
+        raise ValueError("payload-corruption scenarios require a FlatSpec "
+                         "— the engines build one on both param layouts")
+    wire = cs is not None or rb is not None or atk is not None
+    if wire:
         _rv, _rvr, _ur, _urr = _flat_bridge(spec)
+        n_true = spec.n
     down_on = cs is not None and cs.down is not None
     up_on = cs is not None and cs.up is not None
 
@@ -490,14 +508,24 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         kf = k_steps.astype(jnp.float32)
 
         # -- uplink: the server sees x̂ᵢ = anchor + C(Δᵢ + eᵢ) -------------
-        if up_on:
+        w_agg = weights
+        if wire:
             a_flat = bc_flat if down_on else _rv(params0)
-            d_hat = cs.up(_rvr(x_i) - a_flat[None], state, new_state)
-            x_srv = _urr(a_flat[None] + d_hat)
+            d = _rvr(x_i) - a_flat[None]
+            if atk is not None:
+                d = atk.corrupt_delta(state["round"], d, n_true,
+                                      ids=jnp.arange(m, dtype=jnp.int32))
+            if up_on:
+                d = cs.up(d, state, new_state)
+            if rb is not None:
+                d, w_agg, qcount = rb.model(d, weights, state, new_state,
+                                            state["round"],
+                                            jnp.arange(m, dtype=jnp.int32))
+            x_srv = _urr(a_flat[None] + d)
         else:
             x_srv = x_i
 
-        agg = aggregate(anchor, x_srv, kf, weights, kbar)
+        agg = aggregate(anchor, x_srv, kf, w_agg, kbar)
         if down_on:
             # re-base onto the true master: the round pseudo-gradient is
             # measured against the broadcast the clients actually anchored
@@ -519,13 +547,36 @@ def make_layered_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
             transmit, avg_g = orientation_transmit(
                 algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
                 track_nu=track_nu, quantize_transmit=quantize_transmit)
-            if up_on:
-                transmit = _urr(cs.up_nu(_rvr(transmit), state, new_state))
-            new_state["nu"] = constrain(tree_wsum(weights, transmit), 0)
+            w_nu = weights
+            if wire and (up_on or atk is not None or rb is not None):
+                t_rows = _rvr(transmit)
+                if atk is not None:
+                    t_rows = atk.corrupt_nu(state["round"], t_rows, n_true,
+                                            ids=jnp.arange(m,
+                                                           dtype=jnp.int32))
+                if up_on:
+                    t_rows = cs.up_nu(t_rows, state, new_state)
+                if rb is not None:
+                    t_rows, w_nu = rb.nu(t_rows, weights, state,
+                                         state["round"],
+                                         jnp.arange(m, dtype=jnp.int32))
+                transmit = _urr(t_rows)
+            new_state["nu"] = constrain(tree_wsum(w_nu, transmit), 0)
             # Line 11: the *local* reference ν⁽ⁱ⁾ is always the averaged grad
             new_state["nu_i"] = constrain(avg_g, 1)
 
+        if rb is not None:
+            # final non-finite guard: a defended run never writes NaN into
+            # the master (or the ν state calibration broadcasts from)
+            new_state["params"] = rb.guard(new_state["params"], params0)
+            if algo.uses_nu:
+                new_state["nu"] = rb.guard(new_state["nu"], state["nu"])
+                new_state["nu_i"] = rb.guard(new_state["nu_i"],
+                                             state["nu_i"])
+
         metrics = {"loss": jnp.dot(weights, loss0), "kbar": kbar}
+        if rb is not None:
+            metrics["quarantined"] = qcount
         return new_state, metrics
 
     return round_fn
@@ -541,7 +592,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
                       track_nu: str = "delta",
                       spmd_axis_name=None,
                       quantize_transmit: bool = False,
-                      compression=None, spec=None,
+                      compression=None, spec=None, robust=None,
+                      attack=None,
                       param_constraint: Optional[Callable[[PyTree, int],
                                                           PyTree]] = None):
     """The synchronous round over a sampled cohort of C ≤ M clients.
@@ -567,8 +619,16 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         spmd_axis_name=spmd_axis_name)
     aggregate = BUFFERED_AGGREGATORS[algo.aggregator]
     cs = compress.build_stages(compression, spec, algo.uses_nu)
-    if cs is not None:
+    rb = robust_mod.build_round_robust(robust, spec, algo.uses_nu)
+    atk = attack if (attack is not None
+                     and attack.corrupts_payload) else None
+    if atk is not None and spec is None:
+        raise ValueError("payload-corruption scenarios require a FlatSpec "
+                         "— the engines build one on both param layouts")
+    wire = cs is not None or rb is not None or atk is not None
+    if wire:
         _rv, _rvr, _ur, _urr = _flat_bridge(spec)
+        n_true = spec.n
     down_on = cs is not None and cs.down is not None
     up_on = cs is not None and cs.up is not None
 
@@ -611,11 +671,18 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
 
         # uplink compression: error-feedback rows gathered/scattered at
         # the cohort ids only — absentees' accumulators stay untouched
-        if up_on:
+        w_agg = cweights
+        if wire:
             a_flat = bc_flat if down_on else _rv(params0)
-            d_hat = cs.up(_rvr(x_i) - a_flat[None], state, new_state,
-                          ids=cohort)
-            x_srv = _urr(a_flat[None] + d_hat)
+            d = _rvr(x_i) - a_flat[None]
+            if atk is not None:
+                d = atk.corrupt_delta(state["round"], d, n_true, ids=cohort)
+            if up_on:
+                d = cs.up(d, state, new_state, ids=cohort)
+            if rb is not None:
+                d, w_agg, qcount = rb.model(d, cweights, state, new_state,
+                                            state["round"], cohort)
+            x_srv = _urr(a_flat[None] + d)
         else:
             x_srv = x_i
 
@@ -623,7 +690,7 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
         # aggregators with the shared broadcast as every client's anchor —
         # base = the TRUE master, deltas measured vs what clients received
         anchor1 = jax.tree.map(lambda p: p[None], anchor)
-        agg = aggregate(params0, anchor1, x_srv, kf, cweights, kbar)
+        agg = aggregate(params0, anchor1, x_srv, kf, w_agg, kbar)
 
         new_params = server_update(algo, state, params0, agg, new_state)
         new_params = constrain(new_params, 0)
@@ -634,18 +701,40 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jax.Array],
             transmit, avg_g = orientation_transmit(
                 algo, anchor, x_i, g0_i, acc_i, c_all, kf, kbar, lr, lam,
                 track_nu=track_nu, quantize_transmit=quantize_transmit)
-            if up_on:
-                transmit = _urr(cs.up_nu(_rvr(transmit), state, new_state,
-                                         ids=cohort))
-            contrib = tree_wsum(cweights, transmit)
+            w_nu = cweights
+            if wire and (up_on or atk is not None or rb is not None):
+                t_rows = _rvr(transmit)
+                if atk is not None:
+                    t_rows = atk.corrupt_nu(state["round"], t_rows, n_true,
+                                            ids=cohort)
+                if up_on:
+                    t_rows = cs.up_nu(t_rows, state, new_state, ids=cohort)
+                if rb is not None:
+                    # ν renorm preserves Σw̃ so ρ = min(mass, 1) below keeps
+                    # its planned value; if the whole cohort is dropped,
+                    # contrib = 0 and ν decays by (1 − ρ) toward zero — a
+                    # safe calibration fade, never a poisoned mix
+                    t_rows, w_nu = rb.nu(t_rows, cweights, state,
+                                         state["round"], cohort)
+                transmit = _urr(t_rows)
+            contrib = tree_wsum(w_nu, transmit)
             new_nu = nu_mass_mix(state["nu"], contrib, mass)
             new_state["nu"] = constrain(new_nu, 0)
             new_state["nu_i"] = constrain(
                 scatter_nu_rows(state["nu_i"], new_nu, avg_g, cohort,
                                 nu_decay), 1)
 
+        if rb is not None:
+            new_state["params"] = rb.guard(new_state["params"], params0)
+            if algo.uses_nu:
+                new_state["nu"] = rb.guard(new_state["nu"], state["nu"])
+                new_state["nu_i"] = rb.guard(new_state["nu_i"],
+                                             state["nu_i"])
+
         metrics = {"loss": jnp.dot(cweights, loss0) / mass, "kbar": kbar,
                    "mass": mass}
+        if rb is not None:
+            metrics["quarantined"] = qcount
         return new_state, metrics
 
     return round_fn

@@ -4,7 +4,10 @@ from repro.fed.clock import (ClientClock, Timeline, make_clock,
 from repro.fed.population import SAMPLERS, ClientPopulation
 from repro.fed.scenarios import (SCENARIOS, Scenario, diurnal_scenario,
                                  dropout_scenario, flaky_scenario,
-                                 make_scenario, spike_scenario,
+                                 garbage_scenario, inf_inject_scenario,
+                                 make_scenario, nan_inject_scenario,
+                                 scale_attack_scenario,
+                                 sign_flip_scenario, spike_scenario,
                                  trace_scenario)
 from repro.fed.simulation import (FederatedSimulation, History,
                                   compare_algorithms)
@@ -15,4 +18,6 @@ __all__ = ["FederatedSimulation", "History", "compare_algorithms",
            "Timeline", "make_clock", "simulate_timeline",
            "SCENARIOS", "Scenario", "make_scenario", "dropout_scenario",
            "diurnal_scenario", "spike_scenario", "flaky_scenario",
-           "trace_scenario"]
+           "trace_scenario", "nan_inject_scenario", "inf_inject_scenario",
+           "scale_attack_scenario", "sign_flip_scenario",
+           "garbage_scenario"]

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import compress, flat, rounds, stages
+from repro.core import compress, flat, robust, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.core.tree_util import tree_wsum
 from repro.data.partition import gaussian_k_schedule
@@ -58,7 +58,7 @@ from repro.fed.clock import ClientClock, Timeline, make_clock, \
     simulate_timeline
 from repro.fed.population import ClientPopulation
 from repro.fed.scenarios import Scenario, make_scenario
-from repro.fed.simulation import History
+from repro.fed.simulation import History, _check_finite_metric
 
 PyTree = Any
 
@@ -164,6 +164,13 @@ class BufferedAsyncSimulation:
                     and self.population is not None):
                 self.population.availability_fn = \
                     self.scenario.availability_fn
+        # robust aggregation (core/robust.py, DESIGN.md §16): payload
+        # corruption brackets the same wire boundary as compression, the
+        # defense + quarantine sit just before the buffered aggregator
+        self._attack = (self.scenario
+                        if self.scenario is not None
+                        and self.scenario.corrupts_payload else None)
+        self.robust = robust.RobustConfig.from_fed(fed)
         # private copy: the scanned chunk donates its carry (state + anchor
         # buffers), which would delete a caller-owned params tree
         params = jax.tree.map(jnp.array, params)
@@ -186,7 +193,8 @@ class BufferedAsyncSimulation:
         if self.layout == "flat":
             self._spec = flat.make_flat_spec(
                 params, master_dtype=fed.master_dtype or None)
-        elif self.compression is not None:
+        elif (self.compression is not None or self.robust is not None
+                or self._attack is not None):
             self._spec = flat.make_flat_spec(params)
         else:
             self._spec = None
@@ -199,7 +207,8 @@ class BufferedAsyncSimulation:
             params = flat.ravel(self._spec, params)
         self.state = rounds.init_state(params, m, self.algo,
                                        compression=self.compression,
-                                       spec=self._spec)
+                                       spec=self._spec,
+                                       robust=self.robust)
         self.version = 0
         self._device_sampler = callable(getattr(batcher, "sample_row", None))
         self._loss_fn = loss_fn
@@ -298,8 +307,12 @@ class BufferedAsyncSimulation:
         cs = compress.build_stages(self.compression, self._spec, uses_nu)
         down_on = cs is not None and cs.down is not None
         up_on = cs is not None and cs.up is not None
-        if cs is not None:
+        rb = robust.build_round_robust(self.robust, self._spec, uses_nu)
+        atk = self._attack
+        wire = cs is not None or rb is not None or atk is not None
+        if wire:
             _rv, _rvr, _ur, _urr = self._bridge()
+            n_true = self._spec.n
 
         def body(carry, xs):
             state, A, N = carry
@@ -355,20 +368,36 @@ class BufferedAsyncSimulation:
             x_b, g0_b, acc_b, loss0 = client_update(anchor_i, c_b, batches,
                                                     k_steps, lam)
 
-            # uplink compression at the REPORTING ids: each reporter's
+            # uplink wire path at the REPORTING ids: each reporter's
             # error-feedback row rides its own reports (a duplicate
-            # same-buffer reporter resolves last-wins, the nu_i caveat)
-            if up_on:
+            # same-buffer reporter resolves last-wins, the nu_i caveat);
+            # payload corruption lands on the same pseudo-delta rows the
+            # codec sees, and the defense screens what reaches the
+            # buffered aggregator
+            sw_eff = sw
+            if wire:
                 a_rows = _rvr(anchor_i)
-                d_hat = cs.up(_rvr(x_b) - a_rows, state, new_state,
-                              ids=ids)
-                x_srv = _urr(a_rows + d_hat)
+                d = _rvr(x_b) - a_rows
+                if atk is not None:
+                    d = atk.corrupt_delta(state["round"], d, n_true,
+                                          ids=ids)
+                if up_on:
+                    d = cs.up(d, state, new_state, ids=ids)
+                if rb is not None:
+                    d, sw_eff, qcount = rb.model(d, sw, state, new_state,
+                                                 state["round"], ids)
+                x_srv = _urr(a_rows + d)
             else:
                 x_srv = x_b
 
-            agg = aggregate(params, anchor_i, x_srv, kf, sw, kbar)
+            agg = aggregate(params, anchor_i, x_srv, kf, sw_eff, kbar)
             new_params = stages.server_update(algo, state, params, agg,
                                               new_state)
+            if rb is not None:
+                # final non-finite guard BEFORE the broadcast / re-dispatch
+                # anchors read the new model: a defended run never ships a
+                # poisoned version to any client
+                new_params = rb.guard(new_params, params)
             new_state["params"] = new_params
             new_state["round"] = state["round"] + 1
 
@@ -376,17 +405,37 @@ class BufferedAsyncSimulation:
                 transmit, avg_g = stages.orientation_transmit(
                     algo, params, x_b, g0_b, acc_b, c_b, kf, kbar, lr, lam,
                     anchor_i=anchor_i)
-                if up_on:
-                    transmit = _urr(cs.up_nu(_rvr(transmit), state,
-                                             new_state, ids=ids))
-                contrib = tree_wsum(sw, transmit)
+                w_nu = sw
+                if wire and (up_on or atk is not None or rb is not None):
+                    t_rows = _rvr(transmit)
+                    if atk is not None:
+                        t_rows = atk.corrupt_nu(state["round"], t_rows,
+                                                n_true, ids=ids)
+                    if up_on:
+                        t_rows = cs.up_nu(t_rows, state, new_state,
+                                          ids=ids)
+                    if rb is not None:
+                        t_rows, w_nu = rb.nu(t_rows, sw, state,
+                                             state["round"], ids)
+                    transmit = _urr(t_rows)
+                # ν renorm preserves Σw̃ so the mass-mix ρ keeps its
+                # planned value; an all-dropped buffer contributes 0 and
+                # ν decays by (1 − ρ) — a safe fade, never a poisoned mix
+                contrib = tree_wsum(w_nu, transmit)
                 new_state["nu"] = stages.nu_mass_mix(state["nu"], contrib,
                                                      mass)
+                if rb is not None:
+                    # guard ν before the scatter/broadcast below read it
+                    new_state["nu"] = rb.guard(new_state["nu"],
+                                               state["nu"])
                 # duplicate idx (a fast client reporting twice into one
                 # buffer) resolves arbitrarily between its two same-buffer
                 # reports — both are current to within one update
                 new_state["nu_i"] = stages.scatter_nu_rows(
                     state["nu_i"], new_state["nu"], avg_g, ids, nu_decay)
+                if rb is not None:
+                    new_state["nu_i"] = rb.guard(new_state["nu_i"],
+                                                 state["nu_i"])
 
             # this update's broadcast: ONE compression event through the
             # server-side accumulator, persisted for the next gather and
@@ -425,6 +474,8 @@ class BufferedAsyncSimulation:
 
             metrics = {"loss": jnp.dot(sw, loss0) / mass, "kbar": kbar,
                        "mass": mass}
+            if rb is not None:
+                metrics["quarantined"] = qcount
             return (new_state, A, N), metrics
 
         def chunk(carry, xs):
@@ -572,9 +623,15 @@ class BufferedAsyncSimulation:
             if self.scenario is not None:
                 hist.dropped.extend(
                     tl.aborted[sl].mean(axis=1).tolist())
+            if "quarantined" in metrics:
+                hist.quarantined.extend(
+                    np.asarray(metrics["quarantined"],
+                               np.float64).tolist())
             u += r
             if self.eval_fn is not None and u % eval_every == 0:
-                hist.metric.append(float(self.eval_fn(self.params)))
+                value = float(self.eval_fn(self.params))
+                _check_finite_metric(value, u)
+                hist.metric.append(value)
             if verbose and (u % 10 < r or u == t_updates):
                 mtr = hist.metric[-1] if hist.metric else float("nan")
                 print(f"  update {u - 1:4d}  t={hist.sim_time[-1]:8.2f}  "

@@ -26,6 +26,14 @@ models; a :class:`Scenario` perturbs three per-round quantities:
   synchronous engine is insensitive to timing by construction.
 * **availability multiplier** — correlated diurnal phases: modulates the
   ``availability`` cohort sampler and the async dispatch profile.
+* **payload corruption** — Byzantine clients (DESIGN.md §16): a fixed
+  ``rate``-fraction of the fleet (drawn once per seed from a dedicated
+  stream, independent of the round index) corrupts what crosses the wire —
+  the delta rows AND the ν transmit rows — with NaN/Inf injection, ×mag
+  scaling, sign flips, or resampled noise.  Timing is untouched, so the
+  async timeline and all k′/speed/latency paths stay bit-identical to
+  baseline; the damage (and the defense, ``core/robust.py``) is purely in
+  the aggregation payload.
 
 Every draw is keyed ``fold_in(fold_in(fold_in(base, round), tag), client)``
 so any *subset* of clients evaluates to the same values as the full row —
@@ -45,6 +53,10 @@ import numpy as np
 # base-key salt: scenario draws must never collide with the cohort/batcher
 # streams, which fold the raw config seed
 _SALT = 0x5CE7A510
+# the persistent corrupt-client set gets its OWN PRNG stream (not a
+# fold_in tag on the per-round key, which could collide with a round
+# index): membership must be constant across rounds/waves
+_CORRUPT_SALT = 0x0BAD5EED
 
 
 def _client_uniform(key: jax.Array, ids: jax.Array, n: int = 1) -> jax.Array:
@@ -79,6 +91,7 @@ class Scenario:
                  speed: Optional[Callable] = None,
                  latency: Optional[Callable] = None,
                  avail: Optional[Callable] = None,
+                 corrupt: Optional[Callable] = None,
                  rejoin_delay: float = 0.0):
         self.name = str(name)
         self.m = int(m)
@@ -87,6 +100,7 @@ class Scenario:
         self._speed = speed
         self._latency = latency
         self._avail = avail
+        self._corrupt = corrupt
         self.rejoin_delay = float(rejoin_delay)
         if self.rejoin_delay < 0:
             raise ValueError(f"rejoin_delay must be ≥ 0, "
@@ -97,6 +111,10 @@ class Scenario:
     @property
     def perturbs_k(self) -> bool:
         return self._k_eff is not None
+
+    @property
+    def corrupts_payload(self) -> bool:
+        return self._corrupt is not None
 
     @property
     def availability_fn(self) -> Optional[Callable]:
@@ -132,6 +150,30 @@ class Scenario:
         if self._latency is None:
             return jnp.zeros(ids_.shape, jnp.float32)
         return self._latency(self._key(t), t, ids_)
+
+    def _corrupt_rows(self, t, rows, n, ids, tag: int) -> jax.Array:
+        """Apply the payload-corruption hook to ``(B, P)`` wire rows.
+
+        ``tag`` derives a sub-stream per payload kind (0 = delta, 1 = ν)
+        so the two corruptions of one round are independent draws; the
+        hook signature is ``corrupt(key, ids, rows, n)`` with ``rows``
+        pre-cast to f32 and ``n`` the true (unpadded) column count.  The
+        result is cast back to the wire dtype, so NaN/Inf survive and
+        scaling respects the transport precision.
+        """
+        if self._corrupt is None:
+            return rows
+        key = jax.random.fold_in(self._key(t), tag)
+        out = self._corrupt(key, self._ids(ids), rows.astype(jnp.float32), n)
+        return out.astype(rows.dtype)
+
+    def corrupt_delta(self, t, rows, n, ids=None) -> jax.Array:
+        """Corrupt the client→server delta rows for round/wave ``t``."""
+        return self._corrupt_rows(t, rows, n, ids, 0)
+
+    def corrupt_nu(self, t, rows, n, ids=None) -> jax.Array:
+        """Corrupt the client→server ν transmit rows for round ``t``."""
+        return self._corrupt_rows(t, rows, n, ids, 1)
 
     # -- host mirrors: the SAME jax functions evaluated eagerly, so host
     # precomputation (timeline, chunk inputs) and in-scan evaluation are
@@ -310,6 +352,104 @@ def trace_scenario(speed_factors, *, latency_extras=None, avail=None,
                     avail=avail_fn)
 
 
+# ---------------------------------------------------------------------------
+# payload-corruption (Byzantine) scenario builders — DESIGN.md §16
+# ---------------------------------------------------------------------------
+
+def _corrupt_set(m: int, seed: int, rate: float) -> jax.Array:
+    """(M,) bool: the persistent corrupt-client set.  Drawn per client id
+    from a dedicated stream so membership is identical for any subset of
+    ids, any chunk split, and any engine — and constant across rounds."""
+    rate = float(rate)
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"corrupt rate must be in [0, 1], got {rate}")
+    key = jax.random.PRNGKey(seed ^ _SALT ^ _CORRUPT_SALT)
+    u = _client_uniform(key, jnp.arange(m, dtype=jnp.int32))[:, 0]
+    return u < rate
+
+
+def _value_inject_scenario(name: str, value: float, m: int, *,
+                           rate: float, seed: int) -> Scenario:
+    hit_all = _corrupt_set(m, seed, rate)
+
+    def corrupt(key, ids, rows, n):
+        bad = hit_all[ids][:, None] & (jnp.arange(rows.shape[-1]) < n)[None]
+        return jnp.where(bad, jnp.float32(value), rows)
+
+    return Scenario(name, m, seed, corrupt=corrupt)
+
+
+def nan_inject_scenario(m: int, *, rate: float = 0.1,
+                        seed: int = 0) -> Scenario:
+    """Corrupt clients report all-NaN payloads (crashed accumulator /
+    overflowed local training)."""
+    return _value_inject_scenario("nan_inject", float("nan"), m,
+                                  rate=rate, seed=seed)
+
+
+def inf_inject_scenario(m: int, *, rate: float = 0.1,
+                        seed: int = 0) -> Scenario:
+    """Corrupt clients report all-Inf payloads."""
+    return _value_inject_scenario("inf_inject", float("inf"), m,
+                                  rate=rate, seed=seed)
+
+
+def scale_attack_scenario(m: int, *, rate: float = 0.1,
+                          magnitude: float = 10.0,
+                          seed: int = 0) -> Scenario:
+    """Corrupt clients scale their payload ×``magnitude`` — the classic
+    model-boosting attack that drags the weighted mean (and through ν,
+    every client's calibration) toward the attacker's direction."""
+    if magnitude <= 0:
+        raise ValueError(f"scale magnitude must be > 0, got {magnitude}")
+    hit_all = _corrupt_set(m, seed, rate)
+
+    def corrupt(key, ids, rows, n):
+        f = jnp.where(hit_all[ids], jnp.float32(magnitude), 1.0)
+        return rows * f[:, None]
+
+    return Scenario("scale_attack", m, seed, corrupt=corrupt)
+
+
+def sign_flip_scenario(m: int, *, rate: float = 0.1,
+                       seed: int = 0) -> Scenario:
+    """Corrupt clients negate their payload — an unbounded-norm-free
+    attack that survives naive clipping (the flipped row has an honest
+    norm) and targets the aggregate's direction instead."""
+    hit_all = _corrupt_set(m, seed, rate)
+
+    def corrupt(key, ids, rows, n):
+        f = jnp.where(hit_all[ids], jnp.float32(-1.0), 1.0)
+        return rows * f[:, None]
+
+    return Scenario("sign_flip", m, seed, corrupt=corrupt)
+
+
+def garbage_scenario(m: int, *, rate: float = 0.1, magnitude: float = 10.0,
+                     seed: int = 0) -> Scenario:
+    """Corrupt clients replace their payload with fresh Gaussian noise
+    rescaled to ``magnitude``× the honest row's norm — per (round, client,
+    payload-kind) draws keyed exactly like every other scenario, so
+    corrupted runs stay bit-identical across chunk splits and resumes."""
+    if magnitude <= 0:
+        raise ValueError(f"garbage magnitude must be > 0, got {magnitude}")
+    hit_all = _corrupt_set(m, seed, rate)
+
+    def corrupt(key, ids, rows, n):
+        cols = jnp.arange(rows.shape[-1]) < n
+        noise = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(key, i),
+                                        (rows.shape[-1],)))(ids)
+        noise = jnp.where(cols[None, :], noise, 0.0)
+        rn = jnp.sqrt(jnp.sum(rows * rows, axis=-1))
+        nn = jnp.sqrt(jnp.sum(noise * noise, axis=-1))
+        g = noise * (jnp.float32(magnitude) * rn
+                     / jnp.maximum(nn, 1e-12))[:, None]
+        return jnp.where(hit_all[ids][:, None], g, rows)
+
+    return Scenario("garbage", m, seed, corrupt=corrupt)
+
+
 def _trace_from_config(fed, m: int) -> Scenario:
     raise ValueError(
         "scenario='trace' needs explicit per-round device data that a "
@@ -334,6 +474,20 @@ SCENARIOS: dict[str, Callable] = {
         m, rate=fed.scenario_rate, magnitude=fed.scenario_magnitude,
         seed=fed.seed),
     "trace": _trace_from_config,
+    # payload-corruption (Byzantine) models — fed.scenario_rate is the
+    # corrupt-client fraction, fed.scenario_magnitude the attack strength
+    "nan_inject": lambda fed, m: nan_inject_scenario(
+        m, rate=fed.scenario_rate, seed=fed.seed),
+    "inf_inject": lambda fed, m: inf_inject_scenario(
+        m, rate=fed.scenario_rate, seed=fed.seed),
+    "scale_attack": lambda fed, m: scale_attack_scenario(
+        m, rate=fed.scenario_rate, magnitude=fed.scenario_magnitude,
+        seed=fed.seed),
+    "sign_flip": lambda fed, m: sign_flip_scenario(
+        m, rate=fed.scenario_rate, seed=fed.seed),
+    "garbage": lambda fed, m: garbage_scenario(
+        m, rate=fed.scenario_rate, magnitude=fed.scenario_magnitude,
+        seed=fed.seed),
 }
 
 

@@ -26,13 +26,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import compress, engine, flat, rounds, stages
+from repro.core import compress, engine, flat, robust, rounds, stages
 from repro.core.fedopt import get_algorithm
 from repro.data.partition import gaussian_k_schedule
 from repro.fed.population import ClientPopulation
 from repro.fed.scenarios import Scenario, make_scenario
 
 PyTree = Any
+
+
+def _check_finite_metric(value: float, t: int) -> None:
+    """Fail loudly at the eval boundary: a non-finite metric means the run
+    diverged or was poisoned — silently logging NaN into History lets a
+    corrupted model ship (defenses/quarantine: core/robust.py, §16)."""
+    if not np.isfinite(value):
+        raise FloatingPointError(
+            f"evaluation metric is non-finite ({value}) after round {t}: "
+            f"the run has diverged or been poisoned; configure a defense "
+            f"(FedConfig.defense / quarantine_window, core/robust.py)")
 
 
 @dataclasses.dataclass
@@ -52,6 +63,10 @@ class History:
     # mid-round dropouts (k′ < K_i) — population-level for the sync engine,
     # buffer-level for the async engine; empty without a scenario
     dropped: list[float] = dataclasses.field(default_factory=list)
+    # Byzantine robustness (core/robust.py, DESIGN.md §16): number of
+    # participants excluded by an active quarantine each round/update;
+    # empty unless defense/quarantine is configured
+    quarantined: list[float] = dataclasses.field(default_factory=list)
     # wire bytes per round/update under the configured compressors
     # (core/compress.py wire_cost × participants) — recorded on EVERY run,
     # fp32 cost when compression is off, so baselines compare directly
@@ -127,6 +142,24 @@ class FederatedSimulation:
             raise ValueError(f"unknown param_layout {fed.param_layout!r}; "
                              f"choose 'tree' or 'flat'")
         self.layout = fed.param_layout
+        # failure scenario (fed/scenarios.py, DESIGN.md §12): None for
+        # "baseline" — every run path below then takes its literally
+        # unperturbed (golden-pinned) branch.  Resolved BEFORE the spec
+        # decision: payload-corruption scenarios work on wire rows, so the
+        # tree layout needs the flat view table, exactly like compression.
+        self.scenario = (scenario if scenario is not None
+                         else make_scenario(fed))
+        if self.scenario is not None and self.scenario.m != fed.n_clients:
+            raise ValueError(
+                f"scenario for {self.scenario.m} clients does not "
+                f"match fed.n_clients={fed.n_clients}")
+        self._attack = (self.scenario
+                        if self.scenario is not None
+                        and self.scenario.corrupts_payload else None)
+        # Byzantine-robust aggregation (core/robust.py, DESIGN.md §16):
+        # None when defense="none" and quarantine is off — the builders
+        # then bake the identical (golden-pinned) round
+        self.robust = robust.RobustConfig.from_fed(fed)
         # wire compression (core/compress.py, DESIGN.md §14): None when the
         # config requests no compression — every builder below then bakes
         # its literally unchanged (golden-pinned) round
@@ -134,9 +167,11 @@ class FederatedSimulation:
         if self.layout == "flat":
             self._spec = flat.make_flat_spec(
                 params, master_dtype=fed.master_dtype or None)
-        elif self.compression is not None:
-            # the tree round compresses through the view table: it needs
-            # the spec (and flat EF state) even though params stay a pytree
+        elif (self.compression is not None or self.robust is not None
+                or self._attack is not None):
+            # the tree round works the wire rows through the view table:
+            # it needs the spec (and any flat EF/health state) even though
+            # params stay a pytree
             self._spec = flat.make_flat_spec(params)
         else:
             self._spec = None
@@ -149,7 +184,7 @@ class FederatedSimulation:
             params = flat.ravel(self._spec, params)
         self.state = rounds.init_state(params, fed.n_clients, self.algo,
                                        compression=self.compression,
-                                       spec=self._spec)
+                                       spec=self._spec, robust=self.robust)
         self._round: Optional[Callable] = None
         self._chunks: dict[int, Callable] = {}
         self._loss_fn = loss_fn
@@ -170,20 +205,10 @@ class FederatedSimulation:
             raise ValueError(
                 f"population of {self.population.m} clients does not match "
                 f"fed.n_clients={fed.n_clients}")
-        # failure scenario (fed/scenarios.py, DESIGN.md §12): None for
-        # "baseline" — every run path below then takes its literally
-        # unperturbed (golden-pinned) branch
-        self.scenario = (scenario if scenario is not None
-                         else make_scenario(fed))
-        if self.scenario is not None:
-            if self.scenario.m != fed.n_clients:
-                raise ValueError(
-                    f"scenario for {self.scenario.m} clients does not "
-                    f"match fed.n_clients={fed.n_clients}")
-            if (self.scenario.availability_fn is not None
-                    and self.population is not None):
-                self.population.availability_fn = \
-                    self.scenario.availability_fn
+        if (self.scenario is not None
+                and self.scenario.availability_fn is not None
+                and self.population is not None):
+            self.population.availability_fn = self.scenario.availability_fn
         self._dw = None       # lazily-jitted delivered-weights host mirror
 
     def _build_round(self) -> Callable:
@@ -194,11 +219,13 @@ class FederatedSimulation:
         if self.layout == "flat":
             return flat.make_flat_round(
                 self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
-                k_max=self.k_max, compression=self.compression)
+                k_max=self.k_max, compression=self.compression,
+                robust=self.robust, attack=self._attack)
         return rounds.make_round(self._loss_fn, self.algo, lr=self.fed.lr,
                                  k_max=self.k_max,
                                  compression=self.compression,
-                                 spec=self._spec)
+                                 spec=self._spec, robust=self.robust,
+                                 attack=self._attack)
 
     def _round_fn(self) -> Callable:
         """One jitted round for EVERY λ: the round function takes λ as a
@@ -226,11 +253,13 @@ class FederatedSimulation:
             return flat.make_flat_cohort_round(
                 self._spec, self._loss_fn, self.algo, lr=self.fed.lr,
                 k_max=self.k_max, nu_decay=self.fed.cohort_nu_decay,
-                compression=self.compression)
+                compression=self.compression, robust=self.robust,
+                attack=self._attack)
         return stages.make_cohort_round(
             self._loss_fn, self.algo, lr=self.fed.lr, k_max=self.k_max,
             nu_decay=self.fed.cohort_nu_decay,
-            compression=self.compression, spec=self._spec)
+            compression=self.compression, spec=self._spec,
+            robust=self.robust, attack=self._attack)
 
     def _pop_round_fn(self) -> Callable:
         """One jitted cohort round (partial participation, DESIGN.md §10)."""
@@ -340,6 +369,8 @@ class FederatedSimulation:
         hist.wall.append(time.perf_counter() - t0)
         hist.loss.append(float(metrics["loss"]))
         hist.kbar.append(float(metrics["kbar"]))
+        if "quarantined" in metrics:
+            hist.quarantined.append(float(metrics["quarantined"]))
         self._record_dropped(hist, t, 1)
         self._record_bytes(hist, 1, self.fed.n_clients)
 
@@ -353,6 +384,9 @@ class FederatedSimulation:
         dt = time.perf_counter() - tic
         hist.loss.extend(np.asarray(metrics["loss"], np.float64).tolist())
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
+        if "quarantined" in metrics:
+            hist.quarantined.extend(
+                np.asarray(metrics["quarantined"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
         self._record_dropped(hist, t0, r)
         self._record_bytes(hist, r, self.fed.n_clients)
@@ -388,6 +422,8 @@ class FederatedSimulation:
         hist.loss.append(float(metrics["loss"]))
         hist.kbar.append(float(metrics["kbar"]))
         hist.mass.append(float(metrics["mass"]))
+        if "quarantined" in metrics:
+            hist.quarantined.append(float(metrics["quarantined"]))
         self._record_dropped(hist, t, 1)
         self._record_bytes(hist, 1, self.population.cohort_size)
 
@@ -430,6 +466,9 @@ class FederatedSimulation:
         hist.loss.extend(np.asarray(metrics["loss"], np.float64).tolist())
         hist.kbar.extend(np.asarray(metrics["kbar"], np.float64).tolist())
         hist.mass.extend(np.asarray(metrics["mass"], np.float64).tolist())
+        if "quarantined" in metrics:
+            hist.quarantined.extend(
+                np.asarray(metrics["quarantined"], np.float64).tolist())
         hist.wall.extend([dt / r] * r)
         self._record_dropped(hist, t0, r)
         self._record_bytes(hist, r, self.population.cohort_size)
@@ -480,7 +519,9 @@ class FederatedSimulation:
                 publish_fn(self.publish_snapshot())
             if t % eval_every == 0:
                 if self.eval_fn is not None:
-                    hist.metric.append(float(self.eval_fn(self.params)))
+                    value = float(self.eval_fn(self.params))
+                    _check_finite_metric(value, t)
+                    hist.metric.append(value)
                 if self.eval_per_client is not None:
                     hist.per_client.append(
                         [float(v) for v in

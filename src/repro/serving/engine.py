@@ -66,7 +66,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, prefill_buckets=(32, 64, 128, 256),
-                 sampler: Optional[Callable] = None):
+                 sampler: Optional[Callable] = None,
+                 max_pending: int = 0):
         assert cfg.frontend == "none", "engine serves text archs"
         assert cfg.ssm is None and cfg.xlstm is None, \
             "right-padded prefill is exact for KV caches only; SSM state " \
@@ -93,6 +94,12 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.done: list[Completion] = []
         self.ticks = 0
+        # admission bound: with max_pending > 0 the queue is capped and a
+        # submit into a full queue is SHED (counted, not raised) — an
+        # overloaded replica degrades by refusing work, never by growing
+        # an unbounded backlog; 0 keeps the legacy unbounded queue
+        self.max_pending = max_pending
+        self.dropped = 0
 
         # full logits (not last_only): with right-padding the last REAL
         # position differs per request
@@ -113,6 +120,9 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         assert len(req.prompt) <= max(self.buckets), "prompt too long"
+        if self.max_pending > 0 and len(self.queue) >= self.max_pending:
+            self.dropped += 1
+            return
         self.queue.append(req)
 
     def step(self) -> None:

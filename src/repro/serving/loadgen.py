@@ -72,6 +72,7 @@ def replay(engine: ServeEngine, trace: list[tuple[int, Request]], *,
     tick_wall: list[float] = []
     util: list[float] = []
     n0_done, t0_tick = len(engine.done), engine.ticks
+    n0_dropped = getattr(engine, "dropped", 0)
     swapped = swap_at is None
     wall0 = time.perf_counter()
     while pending or engine.queue \
@@ -105,13 +106,17 @@ def replay(engine: ServeEngine, trace: list[tuple[int, Request]], *,
         "tick_wall": tick_wall,
         "utilization": util,
         "mean_utilization": float(np.mean(util)) if util else 0.0,
+        "dropped": getattr(engine, "dropped", 0) - n0_dropped,
     }
 
 
-def latency_stats(samples: list[float]) -> dict[str, float]:
+def latency_stats(samples: list[float],
+                  dropped: int = 0) -> dict[str, float]:
     if not samples:
-        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0,
+                "dropped": float(dropped)}
     arr = np.asarray(samples, np.float64)
     return {"p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),
-            "mean": float(arr.mean())}
+            "mean": float(arr.mean()),
+            "dropped": float(dropped)}

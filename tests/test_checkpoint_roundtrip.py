@@ -129,6 +129,64 @@ def test_publish_hook_fires_on_round_boundaries(task):
                               np.asarray(seen[-1]["flat_master"]))
 
 
+# -- health/quarantine state (core/robust.py, DESIGN.md §16) ------------------
+
+
+_HEALTH_KEYS = ("hz_nonfinite", "hz_mean", "hz_var", "hz_count", "hz_until")
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+def test_health_state_roundtrips_bit_exact(task, tmp_path, layout):
+    """The per-client health vectors ride the same checkpoint as the
+    model/ν/EF state, bit-for-bit, on both layouts."""
+    fed = _fed(param_layout=layout, scenario="nan_inject",
+               scenario_rate=0.25, defense="trimmed_mean",
+               quarantine_window=3)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    sim.run(3, eval_every=3)
+    assert np.asarray(sim.state["hz_nonfinite"]).sum() > 0
+    path = str(tmp_path / "robust.msgpack")
+    serialize.save(path, sim.state)
+    restored = serialize.load(path, sim.state)
+    assert sorted(restored) == sorted(sim.state)
+    for key in _HEALTH_KEYS:
+        assert key in restored
+    _leaves_equal(sim.state, restored)
+
+
+def test_cohort_absentee_health_rows_untouched(task):
+    """A client outside the sampled cohort reports nothing: its health
+    rows must stay bit-identical (no decay, no accidental scatter)."""
+    fed = _fed(cohort_size=3, scenario="nan_inject", scenario_rate=0.25,
+               defense="median", quarantine_window=4)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    before = {k: np.asarray(sim.state[k]).copy() for k in _HEALTH_KEYS}
+    sim.run(1)
+    ids = set(int(i) for i in sim.population.host_cohort(0)[0])
+    after = {k: np.asarray(sim.state[k]) for k in _HEALTH_KEYS}
+    for i in range(M):
+        if i not in ids:
+            for k in _HEALTH_KEYS:
+                assert before[k][i] == after[k][i], (k, i)
+
+
+def test_quarantine_survives_resume(task, tmp_path):
+    """A quarantine window in force at save time is still in force after
+    load: the restored engine keeps excluding the flagged clients."""
+    fed = _fed(scenario="nan_inject", scenario_rate=0.25,
+               defense="trimmed_mean", quarantine_window=8)
+    sim = FederatedSimulation(lr_loss, _params(), fed, task)
+    sim.run(2, eval_every=2)
+    assert np.asarray(sim.state["hz_until"]).max() > 0
+    path = str(tmp_path / "quar.msgpack")
+    serialize.save(path, sim.state)
+    sim2 = FederatedSimulation(lr_loss, _params(), fed, task)
+    sim2.state = serialize.load(path, sim2.state)
+    _leaves_equal(sim.state, sim2.state)
+    hist = sim2.run(1, eval_every=1)
+    assert hist.quarantined and hist.quarantined[0] > 0
+
+
 # -- mid-run swap from file with requests in flight ---------------------------
 
 

@@ -95,6 +95,47 @@ def test_engine_rejects_ssm(setup):
         ServeEngine(cfg, {}, slots=1)
 
 
+def test_admission_bound_sheds_overflow(setup):
+    """max_pending caps the queue: overflow submissions are shed (counted,
+    not raised), the admitted ones complete normally, and the default
+    stays unbounded."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=200 + i,
+                    prompt=rng.integers(1, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=2) for i in range(5)]
+    eng = ServeEngine(cfg, params, slots=1, max_len=64,
+                      prefill_buckets=(8,), max_pending=2)
+    for r in reqs:
+        eng.submit(r)
+    assert len(eng.queue) == 2 and eng.dropped == 3
+    done = eng.run()
+    assert sorted(c.uid for c in done) == [200, 201]
+    assert eng.dropped == 3                   # run() drops nothing more
+    eng2 = ServeEngine(cfg, params, slots=1, max_len=64,
+                       prefill_buckets=(8,))
+    for r in reqs:
+        eng2.submit(dataclasses.replace(r))
+    assert len(eng2.queue) == 5 and eng2.dropped == 0
+
+
+def test_replay_and_latency_stats_surface_dropped(setup):
+    from repro.serving import LoadGen, latency_stats, replay
+    cfg, params = setup
+    gen = LoadGen(population=4, rate=3.0, prompt_len=(2, 4),
+                  max_new=(2, 3), vocab=cfg.vocab, seed=0)
+    trace = gen.generate(8)
+    eng = ServeEngine(cfg, params, slots=1, max_len=64,
+                      prefill_buckets=(8,), max_pending=1)
+    stats = replay(eng, trace)
+    assert stats["dropped"] == eng.dropped > 0
+    # every trace request either completed or was shed — none lost
+    assert stats["n_requests"] + stats["dropped"] == len(trace)
+    lat = latency_stats(stats["tick_wall"], dropped=stats["dropped"])
+    assert lat["dropped"] == float(stats["dropped"])
+    assert latency_stats([], dropped=2)["dropped"] == 2.0
+
+
 def test_sampling_independent_of_coscheduled_traffic(setup):
     """A request's sampled tokens depend only on (uid, step) — serving it
     alone and serving it among other traffic are bit-identical, for a
